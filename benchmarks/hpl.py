@@ -1,0 +1,101 @@
+"""Paper Table 5 — HPL (dense LU) reproduction.
+
+Structure-faithful blocked right-looking LU with partial-pivot-free
+diagonally-dominant matrices (HPL's numerics at benchmark scale), where
+the trailing-submatrix GEMM dominates exactly as in HPL.  We measure the
+sustained GEMM rate on this container's CPU, derive per-"GPU" efficiency
+(sustained / peak GEMM) the way Table 5 derives 78.3%, and project the
+TPU-v5e roofline equivalent.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.config import CHIP
+
+
+def blocked_lu(a: jnp.ndarray, nb: int):
+    """Right-looking blocked LU without pivoting (diag-dominant input)."""
+    n = a.shape[0]
+    for k in range(0, n, nb):
+        kb = min(nb, n - k)
+        akk = a[k:k + kb, k:k + kb]
+        # unblocked factorization of the diagonal block
+        lu = _unblocked_lu(akk)
+        l_kk = jnp.tril(lu, -1) + jnp.eye(kb, dtype=a.dtype)
+        u_kk = jnp.triu(lu)
+        a = a.at[k:k + kb, k:k + kb].set(lu)
+        if k + kb < n:
+            # panel solves
+            a12 = jax.scipy.linalg.solve_triangular(
+                l_kk, a[k:k + kb, k + kb:], lower=True, unit_diagonal=True)
+            a21 = jax.scipy.linalg.solve_triangular(
+                u_kk.T, a[k + kb:, k:k + kb].T, lower=True).T
+            a = a.at[k:k + kb, k + kb:].set(a12)
+            a = a.at[k + kb:, k:k + kb].set(a21)
+            # trailing update — the GEMM that dominates HPL
+            a = a.at[k + kb:, k + kb:].add(-a21 @ a12)
+    return a
+
+
+def _unblocked_lu(a):
+    n = a.shape[0]
+
+    def body(i, a):
+        col = a[:, i] / a[i, i]
+        col = jnp.where(jnp.arange(n) > i, col, a[:, i])
+        a = a.at[:, i].set(col)
+        update = jnp.outer(jnp.where(jnp.arange(n) > i, col, 0.0),
+                           jnp.where(jnp.arange(n) > i, a[i, :], 0.0))
+        return a - update
+    return jax.lax.fori_loop(0, n, body, a)
+
+
+def run(n: int = 1024, nb: int = 128):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    a = a + n * jnp.eye(n, dtype=jnp.float32)      # diagonal dominance
+    x_true = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    b = a @ x_true
+
+    lu_fn = jax.jit(lambda m: blocked_lu(m, nb))
+    us = time_fn(lu_fn, a, warmup=1, iters=2)
+    lu = lu_fn(a)
+    # solve and validate (HPL residual criterion)
+    l = jnp.tril(lu, -1) + jnp.eye(n, dtype=lu.dtype)
+    u = jnp.triu(lu)
+    y = jax.scipy.linalg.solve_triangular(l, b, lower=True,
+                                          unit_diagonal=True)
+    x = jax.scipy.linalg.solve_triangular(u, y, lower=False)
+    resid = float(jnp.linalg.norm(a @ x - b)
+                  / (jnp.linalg.norm(a) * jnp.linalg.norm(x) * n * 1.19e-7))
+
+    flops = 2 / 3 * n ** 3
+    sustained = flops / (us / 1e6)
+
+    # peak GEMM on the same device (the "Max single-GPU GEMM" row)
+    m = 1024
+    g = jnp.asarray(rng.standard_normal((m, m)), jnp.float32)
+    gus = time_fn(jax.jit(lambda x: x @ x), g, warmup=2, iters=3)
+    peak = 2 * m ** 3 / (gus / 1e6)
+    eff = sustained / peak
+
+    # paper comparison + TPU projection
+    paper_eff = 0.783
+    tpu_rmax = CHIP.peak_bf16_flops * eff          # per-chip projection
+    emit("hpl.table5", us,
+         f"n={n};nb={nb};resid={resid:.3e};sustained_gflops="
+         f"{sustained/1e9:.2f};peak_gemm_gflops={peak/1e9:.2f};"
+         f"efficiency={eff:.3f};paper_efficiency={paper_eff};"
+         f"tpu_v5e_projected_rmax_tflops={tpu_rmax/1e12:.1f}")
+    assert resid < 16.0, f"HPL residual check failed: {resid}"
+    return {"efficiency": eff, "residual": resid}
+
+
+if __name__ == "__main__":
+    run()

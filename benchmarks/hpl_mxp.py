@@ -1,0 +1,113 @@
+"""Paper Table 7 — HPL-MxP (mixed-precision LU + iterative refinement).
+
+Faithful numeric structure on TPU terms (DESIGN.md §2): the LU
+factorization's trailing GEMMs run through the *emulated-FP8* kernel
+(kernels/mxp_gemm — per-tile max-abs scaled e4m3, fp32 accumulate: the
+"Sloppy FP8" of the paper), diagonal blocks factor in fp32, and GMRES-free
+iterative refinement in fp32 recovers full accuracy.  Validation follows
+HPL-MxP: scaled residual must be < 16.
+
+Also reports the FP8:BF16 roofline speedup the paper realizes (339.9 vs
+~169 PF projected bf16) mapped to TPU terms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.config import CHIP
+from repro.kernels.ops import mxp_gemm
+
+
+def mxp_blocked_lu(a: jnp.ndarray, nb: int):
+    """Blocked LU whose trailing updates run in emulated FP8."""
+    n = a.shape[0]
+    for k in range(0, n, nb):
+        kb = min(nb, n - k)
+        akk = a[k:k + kb, k:k + kb]
+        lu = _unblocked_lu(akk)
+        l_kk = jnp.tril(lu, -1) + jnp.eye(kb, dtype=a.dtype)
+        u_kk = jnp.triu(lu)
+        a = a.at[k:k + kb, k:k + kb].set(lu)
+        if k + kb < n:
+            a12 = jax.scipy.linalg.solve_triangular(
+                l_kk, a[k:k + kb, k + kb:], lower=True, unit_diagonal=True)
+            a21 = jax.scipy.linalg.solve_triangular(
+                u_kk.T, a[k + kb:, k:k + kb].T, lower=True).T
+            a = a.at[k:k + kb, k + kb:].set(a12)
+            a = a.at[k + kb:, k:k + kb].set(a21)
+            # >>> the HPL-MxP core: low-precision trailing GEMM <<<
+            upd = mxp_gemm(a21, a12, block=kb)
+            a = a.at[k + kb:, k + kb:].add(-upd.astype(a.dtype))
+    return a
+
+
+def _unblocked_lu(a):
+    n = a.shape[0]
+
+    def body(i, a):
+        col = a[:, i] / a[i, i]
+        col = jnp.where(jnp.arange(n) > i, col, a[:, i])
+        a = a.at[:, i].set(col)
+        update = jnp.outer(jnp.where(jnp.arange(n) > i, col, 0.0),
+                           jnp.where(jnp.arange(n) > i, a[i, :], 0.0))
+        return a - update
+    return jax.lax.fori_loop(0, n, body, a)
+
+
+def lu_solve(lu, b):
+    n = lu.shape[0]
+    l = jnp.tril(lu, -1) + jnp.eye(n, dtype=lu.dtype)
+    u = jnp.triu(lu)
+    y = jax.scipy.linalg.solve_triangular(l, b, lower=True,
+                                          unit_diagonal=True)
+    return jax.scipy.linalg.solve_triangular(u, y, lower=False)
+
+
+def run(n: int = 512, nb: int = 128, max_ir: int = 25):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    a = a + n * jnp.eye(n, dtype=jnp.float32)
+    x_true = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    b = a @ x_true
+
+    lu_fn = jax.jit(lambda m: mxp_blocked_lu(m, nb))
+    us = time_fn(lu_fn, a, warmup=0, iters=1)
+    lu = lu_fn(a)
+
+    # iterative refinement: low-precision factorization as preconditioner
+    x = lu_solve(lu, b)
+    history = []
+    iters_used = max_ir
+    for i in range(max_ir):
+        r = b - a @ x
+        scaled = float(jnp.linalg.norm(r, jnp.inf)
+                       / (jnp.linalg.norm(a, jnp.inf)
+                          * jnp.linalg.norm(x, jnp.inf) * n * 1.19e-7))
+        history.append(scaled)
+        if scaled < 1e-3:           # well below the 16.0 pass bar
+            iters_used = i
+            break
+        x = x + lu_solve(lu, r)
+
+    final = history[-1]
+    passed = final < 16.0
+    err = float(jnp.linalg.norm(x - x_true) / jnp.linalg.norm(x_true))
+
+    # roofline projection: fp8 MXU rate vs bf16 on the target part
+    fp8_speedup = 2.0                       # v5p+/Trillium fp8:bf16
+    lu_flops = 2 / 3 * n ** 3
+    emit("hpl_mxp.table7", us,
+         f"n={n};nb={nb};ir_iters={iters_used};scaled_resid={final:.3e};"
+         f"validation={'PASSED' if passed else 'FAILED'};x_err={err:.3e};"
+         f"paper_resid=5.01e-5;paper_bar=16.0;"
+         f"tpu_fp8_projected_speedup={fp8_speedup};"
+         f"lu_gflops_measured={lu_flops/(us/1e6)/1e9:.2f}")
+    assert passed, f"HPL-MxP validation failed: {final}"
+    return {"scaled_resid": final, "ir_iters": iters_used, "passed": passed}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,165 @@
+"""Paper Table 9 — MLPerf GPT-3 175B pretraining: measured reduced run +
+calibrated full-scale performance model.
+
+Two parts:
+
+ 1. **Live step** — the framework's actual train_step on the reduced
+    GPT-3 config (CPU), proving the training path end to end and giving
+    ``us_per_call``.
+
+ 2. **Scale model** — an analytic step-time model of the paper's exact
+    parallel configs (DP×TP×PP×VP, GBS, mbs on H100 + the SAKURAONE
+    fabric), built from: dense-GEMM efficiency, interleaved-1F1B bubble
+    (P−1)/(V·M), PP SendRecv bytes on 400 GbE rails, DP ring all-reduce
+    of the distributed-optimizer shards, TP collectives on NVLink, and
+    the measured comm/compute overlap (Table 10: 72.3% intra-pod, 67.2%
+    cross-pod).  The single free parameter (GEMM efficiency) is
+    calibrated on the 32-node row; the 64- and 96-node rows are
+    *predictions* compared against the paper's measurements.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (H100_FP8_DENSE, NVLINK_BW, emit, time_fn)
+from repro.core.fabric import FABRIC
+
+SEQ = 2048
+N_PARAMS = 175e9
+TOKENS_TO_TARGET = {1024: 1.145e9, 1536: 1.363e9, 2304: 1.372e9}
+
+
+@dataclass
+class PPConfig:
+    nodes: int
+    dp: int
+    tp: int
+    pp: int
+    vp: int
+    gbs: int
+    mbs: int
+    cross_pod: bool
+
+    @property
+    def gpus(self):
+        return self.nodes * 8
+
+
+PAPER_CONFIGS = [
+    PPConfig(32, 4, 4, 16, 6, 1024, 2, cross_pod=False),
+    PPConfig(64, 8, 4, 16, 6, 1536, 2, cross_pod=True),
+    PPConfig(96, 6, 8, 16, 6, 2304, 6, cross_pod=True),
+]
+PAPER_TTT_MIN = {32: 105.31, 64: 58.30, 96: 41.86}
+PAPER_MFU = {32: 0.383, 64: 0.412, 96: 0.359}
+
+
+def step_time_model(c: PPConfig, gemm_eff: float) -> dict:
+    """Returns step time decomposition (seconds)."""
+    tokens_step = c.gbs * SEQ
+    # --- compute: 6ND fwd+bwd + selective-recompute overhead (~1.07x)
+    flops_per_gpu = 6 * N_PARAMS * tokens_step / c.gpus * 1.07
+    t_comp = flops_per_gpu / (H100_FP8_DENSE * gemm_eff)
+
+    # --- pipeline bubble (interleaved 1F1B): (P-1) / (V*M)
+    m_micro = c.gbs // (c.dp * c.mbs)
+    bubble = (c.pp - 1) / (c.vp * m_micro)
+
+    # --- PP SendRecv (dominant NCCL kernel, Table 10: 91.2%)
+    h = 12288
+    act_bytes = c.mbs * SEQ * h * 2          # bf16 activations per micro
+    sends = m_micro * c.vp                    # per stage boundary, per dir
+    # fwd + bwd activations/grad-activations
+    pp_bytes = 2 * sends * act_bytes
+    t_pp = pp_bytes / (FABRIC.nic_bw * 0.85)
+
+    # --- DP all-reduce (distributed optimizer: RS+AG bf16 == 2(n-1)/n)
+    params_per_gpu = N_PARAMS / (c.tp * c.pp)
+    dp_bytes = 2 * (c.dp - 1) / c.dp * params_per_gpu * 2
+    t_dp = dp_bytes / (FABRIC.nic_bw * 0.85)
+    if c.cross_pod:
+        t_dp *= 1.18                          # spine-hop penalty (§6.6)
+
+    # --- TP collectives on NVLink (small share: 3.2+1.8+3.5%)
+    layers_per_gpu = 96 / c.pp
+    tp_bytes = (4 * 2 * (c.tp - 1) / c.tp * c.mbs * SEQ * h * 2
+                * layers_per_gpu * m_micro * c.vp / c.vp)
+    t_tp = tp_bytes / NVLINK_BW
+
+    t_comm = t_pp + t_dp + t_tp
+    overlap = 0.672 if c.cross_pod else 0.723   # Table 10 measured
+    t_step = t_comp * (1 + bubble) + t_comm * (1 - overlap)
+    return {"t_step": t_step, "t_comp": t_comp, "bubble": bubble,
+            "t_pp": t_pp, "t_dp": t_dp, "t_tp": t_tp,
+            "comm_share": t_comm * (1 - overlap) / t_step}
+
+
+def ttt_minutes(c: PPConfig, gemm_eff: float) -> float:
+    st = step_time_model(c, gemm_eff)["t_step"]
+    steps = TOKENS_TO_TARGET[c.gbs] / (c.gbs * SEQ)
+    return steps * st / 60.0
+
+
+def mfu(c: PPConfig, gemm_eff: float) -> float:
+    st = step_time_model(c, gemm_eff)["t_step"]
+    return (6 * N_PARAMS * c.gbs * SEQ / c.gpus) / (st * H100_FP8_DENSE)
+
+
+def calibrate() -> float:
+    """Fit gemm_eff so the 32-node row matches the paper's 105.31 min."""
+    lo, hi = 0.2, 0.9
+    for _ in range(40):
+        mid = (lo + hi) / 2
+        if ttt_minutes(PAPER_CONFIGS[0], mid) > PAPER_TTT_MIN[32]:
+            lo = mid
+        else:
+            hi = mid
+    return (lo + hi) / 2
+
+
+def run_live_reduced():
+    from repro.configs import reduced_config
+    from repro.core.config import (OptimizerConfig, ParallelConfig,
+                                   RunConfig, ShapeConfig, StepKind)
+    from repro.models.model import build_model, make_concrete_batch
+    from repro.train.step import init_train_state, make_train_step
+
+    cfg = reduced_config("gpt3-175b")
+    shape = ShapeConfig("bench", 128, 4, StepKind.TRAIN)
+    run_cfg = RunConfig(model=cfg, shape=shape)
+    model = build_model(cfg, remat="full")
+    state = init_train_state(model, run_cfg, jax.random.key(0))
+    step = jax.jit(make_train_step(model, run_cfg))
+    batch = make_concrete_batch(cfg, shape)
+    us = time_fn(lambda s, b: step(s, b)[0], state, batch, warmup=1, iters=3)
+    new_state, metrics = step(state, batch)
+    return us, float(metrics["loss"])
+
+
+def run():
+    us, loss = run_live_reduced()
+    emit("mlperf_gpt3.live_reduced_step", us, f"loss={loss:.4f}")
+
+    eff = calibrate()
+    rows = []
+    for c in PAPER_CONFIGS:
+        t = ttt_minutes(c, eff)
+        m = mfu(c, eff)
+        d = step_time_model(c, eff)
+        rel = t / PAPER_TTT_MIN[c.nodes] - 1
+        rows.append((c.nodes, t, m, rel))
+        emit(f"mlperf_gpt3.table9.{c.nodes}nodes", d["t_step"] * 1e6,
+             f"ttt_model_min={t:.2f};ttt_paper_min={PAPER_TTT_MIN[c.nodes]};"
+             f"rel_err={rel:+.3f};mfu_model={m:.3f};"
+             f"mfu_paper={PAPER_MFU[c.nodes]};bubble={d['bubble']:.4f};"
+             f"comm_share={d['comm_share']:.3f};gemm_eff={eff:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Table 12 — published-reference comparison vs NVIDIA Eos.
+
+Reproduces the ratio table using our calibrated performance model's TTT
+(benchmarks.mlperf_gpt3 / mlperf_lora) against the official Eos MLPerf
+v4.1 numbers quoted in the paper (96-node Eos row is the paper's linear
+extrapolation, favorable to Eos)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from benchmarks.mlperf_gpt3 import (PAPER_CONFIGS, PAPER_TTT_MIN, calibrate,
+                                    ttt_minutes)
+
+EOS_GPT3 = {32: 96.66, 64: 49.80, 96: 33.20}
+EOS_LORA = {1: 27.93, 8: 4.57}
+PAPER_RATIO = {32: 1.09, 64: 1.17, 96: 1.26}
+
+
+def run():
+    eff = calibrate()
+    for c in PAPER_CONFIGS:
+        ours = ttt_minutes(c, eff)
+        ratio = ours / EOS_GPT3[c.nodes]
+        emit(f"reference.table12.gpt3_{c.nodes}nodes", 0.0,
+             f"ours_model_min={ours:.2f};eos_min={EOS_GPT3[c.nodes]};"
+             f"ratio_model={ratio:.2f};ratio_paper={PAPER_RATIO[c.nodes]}")
+    from benchmarks.mlperf_lora import PAPER as LORA_PAPER
+    for nodes in (1, 8):
+        ratio = LORA_PAPER[nodes] / EOS_LORA[nodes]
+        emit(f"reference.table12.lora_{nodes}node", 0.0,
+             f"paper_min={LORA_PAPER[nodes]};eos_min={EOS_LORA[nodes]};"
+             f"ratio={ratio:.2f}")
+
+
+if __name__ == "__main__":
+    run()

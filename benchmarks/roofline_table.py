@@ -1,0 +1,63 @@
+"""§Roofline — render the dry-run roofline tables from
+experiments/dryrun/*.json (optimized, final cost model) next to
+experiments/dryrun_baseline/*.json (pre-optimization archive).
+
+See EXPERIMENTS.md §Roofline for caveats: baseline artifacts were
+produced with the contemporaneous cost model, so deltas combine code
+optimizations and measurement fixes — the §Perf iteration logs separate
+the two per cell."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+ROOT = pathlib.Path(__file__).resolve().parents[1] / "experiments"
+OUT_DIR = ROOT / "dryrun"
+BASE_DIR = ROOT / "dryrun_baseline"
+
+
+def _load(d: pathlib.Path, mesh: str):
+    out = {}
+    for p in sorted(d.glob(f"*_{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r.get("notes"):
+            continue
+        arch = r["arch"].replace("mamba2-1-3b", "mamba2-1.3b")
+        out[(arch, r["shape"])] = r
+    return out
+
+
+def _frac(r):
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    ideal = r["model_flops"] / (r["chips"] * 197e12)
+    ib = r.get("ideal_bytes")
+    if ib:
+        ideal = max(ideal, ib / (r["chips"] * 819e9))
+    return ideal / bound if bound else 0.0
+
+
+def run(mesh: str = "16x16"):
+    opt = _load(OUT_DIR, mesh)
+    base = _load(BASE_DIR, mesh) if BASE_DIR.exists() else {}
+    if not opt:
+        emit("roofline.table", 0.0, "no dry-run artifacts found")
+        return []
+    for (arch, shape), d in sorted(opt.items()):
+        bound = max(d["compute_s"], d["memory_s"], d["collective_s"])
+        b = base.get((arch, shape))
+        base_str = ""
+        if b:
+            bb = max(b["compute_s"], b["memory_s"], b["collective_s"])
+            base_str = f";baseline_bound_s={bb:.4f};speedup={bb/max(bound,1e-12):.2f}x"
+        emit(f"roofline.{arch}.{shape}", bound * 1e6,
+             f"compute_s={d['compute_s']:.4f};memory_s={d['memory_s']:.4f};"
+             f"collective_s={d['collective_s']:.4f};dom={d['dominant']};"
+             f"useful={d['useful_ratio']:.3f};"
+             f"roofline_frac={_frac(d):.4f}" + base_str)
+    return opt
+
+
+if __name__ == "__main__":
+    run()

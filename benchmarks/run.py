@@ -1,0 +1,50 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks.common.emit).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run hpl hpcg   # subset
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+SUITES = [
+    ("hpl", "benchmarks.hpl"),                      # Table 5
+    ("hpcg", "benchmarks.hpcg"),                    # Table 6
+    ("hpl_mxp", "benchmarks.hpl_mxp"),              # Table 7
+    ("io500", "benchmarks.io500"),                  # Table 8
+    ("mlperf_gpt3", "benchmarks.mlperf_gpt3"),      # Table 9
+    ("comm_profile", "benchmarks.comm_profile"),    # Table 10
+    ("mlperf_lora", "benchmarks.mlperf_lora"),      # Table 11
+    ("reference", "benchmarks.reference_compare"),  # Table 12
+    ("workload", "benchmarks.workload"),            # Figures 3-7, T13-14
+    ("scheduler", "benchmarks.scheduler_study"),    # §8.5 (beyond paper)
+    ("roofline", "benchmarks.roofline_table"),      # §Roofline
+]
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    wanted = set(argv) if argv else None
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod_name in SUITES:
+        if wanted and name not in wanted:
+            continue
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        print(f"# {len(failures)} suite failures: {failures}")
+        return 1
+    print("# all suites passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

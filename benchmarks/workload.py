@@ -1,0 +1,79 @@
+"""Paper §7 Figures 3–7 + Tables 13–14 — workload dynamics from the
+cluster simulator, with calibration deltas against the paper's numbers."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core.cluster_sim import (Simulation, obs1_job_states,
+                                    obs2_job_sizes, obs3_utilization,
+                                    obs4_runtime_cdf, obs5_daily_submissions,
+                                    obs6_faults, obs7_interconnect)
+
+PAPER = {
+    "cancelled_time_share": 0.735,
+    "failed_time_share": 0.003,
+    "failed_count_share": 0.169,
+    "single_node_count_share": 0.769,
+    "le4_count_share": 0.864,
+    "ge17_gpu_time_share": 0.733,
+    "single_node_time_share": 0.018,
+    "cpt_median_util": 98.4,
+    "cpt_low_util_frac": 0.011,
+    "frac_cpt_gt_week": 0.136,
+}
+
+
+def run(seed: int = 0):
+    t0 = time.perf_counter()
+    sim = Simulation(seed=seed).run()
+    us = (time.perf_counter() - t0) * 1e6
+
+    o1 = obs1_job_states(sim)
+    o2 = obs2_job_sizes(sim)
+    o3 = obs3_utilization(sim)
+    o4 = obs4_runtime_cdf(sim)
+    o5 = obs5_daily_submissions(sim)
+    o6 = obs6_faults(sim)
+    o7 = obs7_interconnect(sim)
+
+    emit("workload.fig3_states", us,
+         f"cancelled_time={o1['gpu_time_share'].get('CANCELLED', 0):.3f}"
+         f"(paper {PAPER['cancelled_time_share']});"
+         f"failed_time={o1['gpu_time_share'].get('FAILED', 0):.4f}"
+         f"(paper {PAPER['failed_time_share']});"
+         f"failed_count={o1['count_share'].get('FAILED', 0):.3f}"
+         f"(paper {PAPER['failed_count_share']})")
+    emit("workload.fig4_sizes", 0.0,
+         f"single_node_count={o2['single_node_count_share']:.3f}"
+         f"(paper {PAPER['single_node_count_share']});"
+         f"le4_count={o2['le4_count_share']:.3f}"
+         f"(paper {PAPER['le4_count_share']});"
+         f"ge17_time={o2['ge17_gpu_time_share']:.3f}"
+         f"(paper {PAPER['ge17_gpu_time_share']})")
+    emit("workload.fig5_utilization", 0.0,
+         ";".join(f"{k}={v:.1f}" for k, v in
+                  sorted(o3["median_util"].items())))
+    cpt = o4.get("17-32", {})
+    emit("workload.fig6_runtimes", 0.0,
+         f"cpt_median_h={cpt.get('median_h', 0):.1f};"
+         f"cpt_frac_gt_week={cpt.get('frac_gt_week', 0):.3f}"
+         f"(paper {PAPER['frac_cpt_gt_week']})")
+    emit("workload.fig7_phase_shift", 0.0,
+         f"cpt_center_day={o5['cpt_center_day']:.1f};"
+         f"ft_center_day={o5['ft_center_day']:.1f};"
+         f"shift_days={o5['ft_center_day'] - o5['cpt_center_day']:.1f}")
+    emit("workload.table13_faults", 0.0,
+         f"total={o6['total']}(paper 21);"
+         + ";".join(f"{k}={v}" for k, v in sorted(
+             o6["by_component"].items()))
+         + ";by_month=" + str(o6["by_month"]).replace(" ", ""))
+    emit("workload.table14_interconnect", 0.0,
+         f"jobA_peak={o7['job_a']['nic_peak_gbs']}(paper 22.6);"
+         f"jobB_peak={o7['job_b']['nic_peak_gbs']}(paper 18.9);"
+         f"jobB_slow_rails={o7['job_b']['rails_gbs'][:2]}(paper ~8.0)")
+    return sim
+
+
+if __name__ == "__main__":
+    run()

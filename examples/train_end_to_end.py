@@ -1,0 +1,46 @@
+"""End-to-end driver (deliverable b): train a ~100M-param dense model for
+a few hundred steps with the full substrate stack — packed data pipeline,
+AdamW + cosine schedule, grad accumulation, async checkpointing with
+restart — and verify the loss decreases.
+
+    PYTHONPATH=src python examples/train_end_to_end.py [--steps 300]
+
+(~100M params: 12 layers x d_model 512, vocab 32768 — runs on this CPU
+container in ~20-40 min at the default 200 steps; use --steps 40 for a
+quick pass.)
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.config import Activation, Family, ModelConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    # ~100M dense LM
+    cfg = ModelConfig(
+        name="dense-100m", family=Family.DENSE, num_layers=12, d_model=512,
+        num_heads=8, num_kv_heads=4, head_dim=64, d_ff=2048,
+        vocab_size=32_768, activation=Activation.SWIGLU, qk_norm=True,
+        pad_vocab_to_multiple=256)
+    import repro.configs as C
+    import repro.launch.train as T
+    C.register_config("dense-100m", cfg)
+
+    rc = T.main(["--arch", "dense-100m", "--steps", str(args.steps),
+                 "--batch", str(args.batch), "--seq", str(args.seq),
+                 "--ckpt-dir", args.ckpt, "--ckpt-every", "50",
+                 "--remat", "none", "--log-every", "10"])
+    sys.exit(rc)
+
+
+if __name__ == "__main__":
+    main()

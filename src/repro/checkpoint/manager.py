@@ -1,0 +1,188 @@
+"""Sharded, asynchronous, atomic checkpointing.
+
+Design (paper C4/C7 — §4.3 storage plane, §8.5 preemption points):
+
+  * **Sharded layout** — every pytree leaf is one ``.npy`` file under
+    ``step_<n>/`` (on a real cluster: one file per (leaf × process), the
+    Lustre-striping analogue; ``process_index`` is in the filename so the
+    layout is multi-host-ready).
+  * **Atomic commit** — writes go to ``step_<n>.tmp/``; the manifest is
+    written last, the directory fsync'd and renamed.  A crash mid-write
+    leaves only a ``.tmp`` that restore ignores — restart-safe.
+  * **Async** — ``save(..., blocking=False)`` snapshots to host memory
+    synchronously (the jax.device_get) and writes on a background thread,
+    so training overlaps checkpoint I/O exactly like the paper's separate
+    storage plane overlaps the GPU fabric.
+  * **Completion events** — observers are notified with the committed
+    step; the cluster scheduler uses these as safe preemption points
+    (paper §8.5 checkpoint-based preemption).
+  * **Retention** — keeps the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree, prefix=()):
+    """Stable (path, leaf) pairs for a nested dict/list/namedtuple tree."""
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _leaf_paths(tree[k], prefix + (str(k),))
+    elif hasattr(tree, "_fields"):          # namedtuple
+        for k in tree._fields:
+            yield from _leaf_paths(getattr(tree, k), prefix + (k,))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _leaf_paths(v, prefix + (str(i),))
+    elif tree is None:
+        return
+    else:
+        yield prefix, tree
+
+
+def _set_path(tree, path, value):
+    if isinstance(tree, dict):
+        k = path[0]
+        if len(path) == 1:
+            tree[k] = value
+        else:
+            _set_path(tree[k], path[1:], value)
+    elif hasattr(tree, "_fields"):
+        # namedtuples are immutable: caller must rebuild; we convert on load
+        raise TypeError("restore into namedtuple handled by caller")
+    else:
+        raise TypeError(f"cannot set path {path} in {type(tree)}")
+
+
+def save_pytree(tree, directory: pathlib.Path, process_index: int = 0):
+    directory.mkdir(parents=True, exist_ok=True)
+    index = []
+    for path, leaf in _leaf_paths(tree):
+        name = ".".join(path) + f".p{process_index}.npy"
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(directory / name, arr)
+        index.append({"path": list(path), "file": name,
+                      "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    return index
+
+
+def load_pytree(directory: pathlib.Path, like, process_index: int = 0):
+    """Load into the structure of ``like`` (shape-validated)."""
+    leaves, treedef = jax.tree.flatten(like)
+    paths = [p for p, _ in _leaf_paths(like)]
+    assert len(paths) == len(leaves), "tree walk mismatch"
+    loaded = []
+    for path, leaf in zip(paths, leaves):
+        name = ".".join(path) + f".p{process_index}.npy"
+        arr = np.load(directory / name)
+        want = tuple(getattr(leaf, "shape", ()) or ())
+        if want and tuple(arr.shape) != want:
+            raise ValueError(f"ckpt shape mismatch at {path}: "
+                             f"{arr.shape} vs {want}")
+        loaded.append(arr)
+    return jax.tree.unflatten(treedef, loaded)
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, keep: int = 3, process_index: int = 0):
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.process_index = process_index
+        self._observers: List[Callable[[int], None]] = []
+        self._pending: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    # -- events (checkpoint-completion => safe preemption points, §8.5) --
+    def add_completion_observer(self, fn: Callable[[int], None]):
+        self._observers.append(fn)
+
+    def _notify(self, step: int):
+        for fn in self._observers:
+            fn(step)
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> pathlib.Path:
+        return self.root / f"step_{step:08d}"
+
+    def save(self, step: int, state, extra: Optional[Dict] = None,
+             blocking: bool = True):
+        """Snapshot synchronously, write asynchronously unless blocking."""
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+
+        def _write():
+            final = self._step_dir(step)
+            tmp = final.with_suffix(".tmp")
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            index = save_pytree(host_state, tmp, self.process_index)
+            manifest = {
+                "step": step,
+                "time": time.time(),
+                "process_count": 1,
+                "leaves": index,
+                "extra": extra or {},
+            }
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            fd = os.open(tmp, os.O_RDONLY)
+            os.fsync(fd)
+            os.close(fd)
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)          # atomic commit
+            self._gc()
+            self._notify(step)
+
+        self.wait()                    # one outstanding async save at a time
+        if blocking:
+            _write()
+        else:
+            with self._lock:
+                self._pending = threading.Thread(target=_write, daemon=True)
+                self._pending.start()
+
+    def wait(self):
+        with self._lock:
+            t = self._pending
+            self._pending = None
+        if t is not None:
+            t.join()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for p in self.root.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like, step: Optional[int] = None):
+        """Returns (state, manifest_extra). ``like`` supplies structure
+        (arrays or ShapeDtypeStructs)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        state = load_pytree(d, like, self.process_index)
+        return state, manifest["extra"], step

@@ -1,0 +1,38 @@
+"""DBRX-132B — fine-grained MoE, 16 experts top-4, GQA kv=8.
+[hf:databricks/dbrx-base; unverified]"""
+from repro.core.config import Activation, Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family=Family.MOE,
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=10752,                        # per-expert FFN width
+    num_experts=16,
+    num_experts_per_tok=4,
+    vocab_size=100_352,
+    activation=Activation.SWIGLU,
+    rope_theta=500_000.0,
+    source="hf:databricks/dbrx-base; unverified",
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b-reduced",
+        family=Family.MOE,
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=96,
+        num_experts=4,
+        num_experts_per_tok=2,
+        vocab_size=512,
+        activation=Activation.SWIGLU,
+        pad_vocab_to_multiple=16,
+    )

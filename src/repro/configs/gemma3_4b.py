@@ -1,0 +1,40 @@
+"""Gemma3-4B — dense GQA, 5:1 local:global attention, 128k context.
+[hf:google/gemma-3-1b-pt; unverified]"""
+from repro.core.config import Activation, Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    family=Family.DENSE,
+    num_layers=34,
+    d_model=2560,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262_144,
+    activation=Activation.GEGLU,
+    qk_norm=True,                     # gemma3 uses qk-norm
+    rope_theta=1_000_000.0,
+    sliding_window=1024,              # local layers window
+    local_global_pattern=5,           # 5 local : 1 global
+    source="hf:google/gemma-3-1b-pt (scaled per assignment); unverified",
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-4b-reduced",
+        family=Family.DENSE,
+        num_layers=6,                 # one full 5:1 local:global period
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        activation=Activation.GEGLU,
+        qk_norm=True,
+        sliding_window=16,
+        local_global_pattern=5,
+        pad_vocab_to_multiple=16,
+    )

@@ -1,0 +1,36 @@
+"""Mamba2-1.3B — attention-free SSM with SSD (state-space duality).
+[arXiv:2405.21060; unverified]"""
+from repro.core.config import Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family=Family.SSM,
+    num_layers=48,
+    d_model=2048,
+    d_ff=0,                            # attention-free, no FFN blocks
+    vocab_size=50_280,                 # padded to 50432
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv_width=4,
+    ssm_chunk=256,
+    tie_embeddings=True,
+    source="arXiv:2405.21060; unverified",
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-1.3b-reduced",
+        family=Family.SSM,
+        num_layers=2,
+        d_model=64,
+        d_ff=0,
+        vocab_size=512,
+        ssm_state=16,
+        ssm_head_dim=16,
+        ssm_expand=2,
+        ssm_conv_width=4,
+        ssm_chunk=32,
+        pad_vocab_to_multiple=16,
+    )

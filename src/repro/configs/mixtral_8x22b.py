@@ -1,0 +1,39 @@
+"""Mixtral-8x22B — MoE 8 experts top-2, GQA kv=8, SWA. [arXiv:2401.04088; hf]"""
+from repro.core.config import Activation, Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family=Family.MOE,
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    num_experts=8,
+    num_experts_per_tok=2,
+    vocab_size=32_768,
+    activation=Activation.SWIGLU,
+    rope_theta=1_000_000.0,
+    sliding_window=4096,               # SWA -> window-bounded decode cache
+    source="arXiv:2401.04088; hf",
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b-reduced",
+        family=Family.MOE,
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=96,
+        num_experts=4,
+        num_experts_per_tok=2,
+        vocab_size=512,
+        activation=Activation.SWIGLU,
+        sliding_window=16,
+        pad_vocab_to_multiple=16,
+    )

@@ -1,0 +1,45 @@
+"""Qwen2-VL-7B — VLM backbone with M-RoPE and dynamic resolution.
+[arXiv:2409.12191; hf]
+
+Vision frontend (ViT patch encoder) is a STUB per the assignment:
+``input_specs()`` supplies precomputed patch embeddings plus 3-D
+(t, h, w) positions consumed by M-RoPE.
+"""
+from repro.core.config import Activation, Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family=Family.VLM,
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152_064,
+    activation=Activation.SWIGLU,
+    rope_theta=1_000_000.0,
+    m_rope_sections=(16, 24, 24),      # t/h/w sections over head_dim/2
+    frontend_dim=3584,                 # precomputed patch embeddings
+    tie_embeddings=False,
+    source="arXiv:2409.12191; hf",
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-7b-reduced",
+        family=Family.VLM,
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        activation=Activation.SWIGLU,
+        m_rope_sections=(2, 3, 3),
+        frontend_dim=64,
+        tie_embeddings=False,
+        pad_vocab_to_multiple=16,
+    )

@@ -1,0 +1,44 @@
+"""SeamlessM4T-medium — encoder-decoder multimodal (audio) backbone.
+[arXiv:2308.11596; hf]
+
+The modality frontend (speech feature extractor) is a STUB per the
+assignment: ``input_specs()`` supplies precomputed frame embeddings of
+``frontend_dim`` directly to the encoder.
+"""
+from repro.core.config import Activation, Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family=Family.ENCDEC,
+    num_layers=12,                     # decoder layers
+    encoder_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256_206,                # padded to 256256 for sharding
+    activation=Activation.GELU,
+    frontend_dim=1024,                 # precomputed audio frame embeddings
+    tie_embeddings=False,
+    source="arXiv:2308.11596; hf",
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium-reduced",
+        family=Family.ENCDEC,
+        num_layers=2,
+        encoder_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=510,                # deliberately unpadded (tests padding)
+        activation=Activation.GELU,
+        frontend_dim=64,
+        tie_embeddings=False,
+        pad_vocab_to_multiple=16,
+    )

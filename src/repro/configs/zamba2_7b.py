@@ -1,0 +1,44 @@
+"""Zamba2-7B — hybrid: Mamba2 backbone + shared (weight-tied) attention
+block applied periodically. [arXiv:2411.15242; unverified]"""
+from repro.core.config import Activation, Family, ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family=Family.HYBRID,
+    num_layers=81,                     # mamba2 blocks
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,                        # shared block MLP
+    vocab_size=32_000,
+    activation=Activation.SWIGLU,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv_width=4,
+    ssm_chunk=256,
+    attn_every=6,                      # shared attn block every 6 mamba blocks
+    source="arXiv:2411.15242; unverified",
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b-reduced",
+        family=Family.HYBRID,
+        num_layers=5,                  # 2 groups of 2 + tail of 1
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        ssm_state=16,
+        ssm_head_dim=16,
+        ssm_expand=2,
+        ssm_conv_width=4,
+        ssm_chunk=32,
+        attn_every=2,
+        pad_vocab_to_multiple=16,
+    )

@@ -1,0 +1,134 @@
+"""Fabric model of the SAKURAONE interconnect (paper §4.2/§5.2, C1/C6).
+
+Models the rail-optimized two-pod leaf–spine 800 GbE fabric analytically:
+100 nodes × 8 rails, 8 leafs/pod, 8 spines; RoCEv2 with DCQCN-style
+congestion response (ECN marking above a queue threshold, paper Table 15).
+
+Used by:
+  * the cluster simulator (per-job collective slowdowns, per-port
+    bandwidth telemetry -> Table 14 / Observation 7),
+  * benchmarks/interconnect.py (Table 14 reproduction),
+  * the scheduling cost model in benchmarks/mlperf_gpt3.py (cross-pod
+    penalty observed in Table 10).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+GB = 1e9
+
+
+@dataclass(frozen=True)
+class FabricSpec:
+    nodes: int = 100
+    gpus_per_node: int = 8
+    rails: int = 8                      # one NIC/rail per GPU
+    nic_gbps: float = 400.0             # 400 GbE per rail NIC
+    leaf_per_pod: int = 8
+    pods: int = 2
+    spines: int = 8
+    leaf_spine_gbps: float = 800.0      # 2×400 GbE inter-switch links
+    switch_capacity_tbps: float = 51.2  # Tomahawk 5
+    # DCQCN / ECN model (Table 15)
+    ecn_min_bytes: float = 2e6
+    ecn_max_bytes: float = 10e6
+    ecn_max_mark_prob: float = 0.01
+    rtt_us: float = 8.0
+
+    @property
+    def nic_bw(self) -> float:          # B/s full duplex per direction
+        return self.nic_gbps / 8 * GB
+
+    @property
+    def leaf_spine_bw(self) -> float:
+        return self.leaf_spine_gbps / 8 * GB
+
+
+FABRIC = FabricSpec()
+
+
+def pod_of_node(node: int, spec: FabricSpec = FABRIC) -> int:
+    return 0 if node < spec.nodes // 2 else 1
+
+
+def ring_allreduce_time(bytes_per_gpu: float, n_gpus: int,
+                        cross_pod: bool, spec: FabricSpec = FABRIC,
+                        efficiency: float = 0.85) -> float:
+    """Ring all-reduce over rails: 2(n-1)/n × size / rail_bw (+ spine
+    penalty when the ring crosses pods — the Table 10 overlap drop)."""
+    if n_gpus <= 1:
+        return 0.0
+    wire = 2 * (n_gpus - 1) / n_gpus * bytes_per_gpu
+    bw = spec.nic_bw * efficiency
+    t = wire / bw
+    if cross_pod:
+        # spine oversubscription during synchronized bursts (measured as
+        # overlap 72.3% -> 67.2% and comm share 16.4% -> 19.3% in Table 10)
+        t *= 1.18
+    return t
+
+
+def ecn_mark_prob(queue_bytes: float, spec: FabricSpec = FABRIC) -> float:
+    """RED/DCQCN marking curve with the paper's production thresholds."""
+    if queue_bytes <= spec.ecn_min_bytes:
+        return 0.0
+    if queue_bytes >= spec.ecn_max_bytes:
+        return 1.0  # saturated mark rate — the failure mode rule (1) warns on
+    frac = ((queue_bytes - spec.ecn_min_bytes)
+            / (spec.ecn_max_bytes - spec.ecn_min_bytes))
+    return frac * spec.ecn_max_mark_prob
+
+
+def dcqcn_throughput_factor(offered_load: float,
+                            spec: FabricSpec = FABRIC) -> float:
+    """Fraction of line rate sustained under a given offered load (>1 =
+    oversubscribed incast).  Simple fixed-point of the DCQCN rate
+    controller: rate decreases multiplicatively with mark probability."""
+    if offered_load <= 1.0:
+        return 1.0
+    # queue grows with oversubscription; map to a mark prob and back off
+    queue = spec.ecn_min_bytes + (offered_load - 1.0) * 8e6
+    p = ecn_mark_prob(queue, spec)
+    return max(1.0 / offered_load, 1.0 - 0.5 * p * spec.rtt_us)
+
+
+@dataclass
+class PortCounters:
+    """Cumulative byte counters per (node, rail) — the NIC-side telemetry
+    of Observation 7 (60 s resolution full-duplex difference rates)."""
+    spec: FabricSpec = field(default_factory=lambda: FABRIC)
+
+    def __post_init__(self):
+        self.tx = np.zeros((self.spec.nodes, self.spec.rails))
+        self.rx = np.zeros((self.spec.nodes, self.spec.rails))
+
+    def add_collective(self, nodes: Sequence[int], bytes_per_gpu: float,
+                       rail_imbalance: Optional[np.ndarray] = None):
+        """Account a ring all-reduce's wire bytes on every participating
+        rail.  ``rail_imbalance``: per-rail multipliers (cross-rail
+        degradation events, Observation 7 Job B)."""
+        w = 2 * bytes_per_gpu          # tx+rx per GPU on its rail
+        imb = (rail_imbalance if rail_imbalance is not None
+               else np.ones(self.spec.rails))
+        for n in nodes:
+            self.tx[n] += w / 2 * imb
+            self.rx[n] += w / 2 * imb
+
+    def peak_rate(self, nodes: Sequence[int], window_s: float = 60.0
+                  ) -> Tuple[float, np.ndarray]:
+        """(single-port max GB/s, per-rail GB/s on the peak node)."""
+        sub = (self.tx[list(nodes)] + self.rx[list(nodes)]) / window_s / GB
+        peak_node = int(np.argmax(sub.max(axis=1)))
+        return float(sub.max()), sub[peak_node]
+
+
+def nvlink_traffic_per_gpu(model_bytes: float, tp: int) -> float:
+    """Intra-node NVLink traffic for TP collectives (Table 14 NVLink col)."""
+    if tp <= 1:
+        return 0.0
+    return 2 * (tp - 1) / tp * model_bytes

@@ -1,0 +1,453 @@
+"""While-aware cost model over optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits each ``while`` body **once**, so a
+scan-over-layers module under-reports FLOPs/bytes by ~num_layers×.  The
+roofline needs honest totals, so we re-derive them from the compiled HLO
+text with loop trip counts applied (XLA annotates
+``backend_config={"known_trip_count":{"n":…}}`` on scan-derived whiles).
+
+Accounting rules (per device — the SPMD module has local shapes):
+
+  * FLOPs        — ``dot``: 2 × result_elements × contracted_size
+                   (contracting dims parsed from ``lhs_contracting_dims``),
+                   accumulated recursively through fusions/calls/whiles.
+  * HBM bytes    — operands + result of every *top-level* instruction
+                   (fusion internals are VMEM-resident and free — the fused
+                   TPU memory model).  ``dynamic-slice`` /
+                   ``dynamic-update-slice`` / ``gather`` count only the
+                   moved slice, not the backing buffer.
+  * collectives  — operand bytes per collective kind × trip counts.
+
+Operand shapes are resolved through a per-computation symbol table (the
+HLO text references operands as ``%name`` without inline shapes).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "constant",
+             "bitcast", "after-all", "partition-id", "replica-id"}
+_SLICE_OPS = {"dynamic-slice", "gather", "slice"}
+_UPDATE_OPS = {"dynamic-update-slice", "scatter"}
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast",
+               "ragged-all-to-all")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COND_RE = re.compile(r"condition=(%?[\w.\-]+)")
+_BODY_RE = re.compile(r"body=(%?[\w.\-]+)")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|branch_computations)="
+    r"(?:\{([^}]*)\}|(%?[\w.\-]+))")
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+_SCOPE_RE = re.compile(r"vmem:([\w\-]+)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->")
+
+
+def _shape_info(text: str) -> Tuple[int, int, List[int]]:
+    """(total_elems, total_bytes, first_shape_dims) over all shape tokens."""
+    elems = byts = 0
+    first_dims: List[int] = []
+    for i, m in enumerate(_SHAPE_RE.finditer(text)):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        dl = []
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+                dl.append(int(d))
+        elems += n
+        byts += n * _DTYPE_BYTES.get(dt, 0)
+        if i == 0:
+            first_dims = dl
+    return elems, byts, first_dims
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_bytes: int
+    result_elems: int
+    operands: List[str]
+    attrs: str
+    rhs: str
+    cond: Optional[str] = None
+    body: Optional[str] = None
+    calls: List[str] = field(default_factory=list)
+    trip: Optional[int] = None
+    scope: Optional[str] = None
+    is_root: bool = False
+    result_dtype: str = ""
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    symbols: Dict[str, Tuple[int, List[int]]] = field(default_factory=dict)
+    # name -> (bytes, dims of first shape)
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    # f32-wire collectives normalized to the recipe's bf16 (the CPU backend
+    # upcasts bf16 dots to f32 and parks collectives on the f32 tensors; a
+    # TPU lowering keeps them bf16 — see EXPERIMENTS.md §Roofline caveats)
+    coll_bytes_norm: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "CostTotals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_bytes_norm.items():
+            self.coll_bytes_norm[k] = (self.coll_bytes_norm.get(k, 0.0)
+                                       + v * mult)
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    @property
+    def collective_total_norm(self) -> float:
+        return sum(self.coll_bytes_norm.values())
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    s = line.strip().rstrip(",")
+    if "=" not in s or s.startswith("//") or s.startswith("ROOT %") is False \
+            and not s.startswith("%"):
+        # instruction lines start with %name or ROOT %name
+        if not s.startswith("ROOT"):
+            return None
+    lhs, rhs = s.split("=", 1)
+    name = lhs.replace("ROOT", "").strip().lstrip("%").split(" ")[0]
+    rhs = rhs.strip()
+    mop = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+    if not mop:
+        return None
+    opcode = mop.group(1)
+    result_part = rhs[:mop.start()]
+    args_part = rhs[mop.end():]
+    depth, i = 1, 0
+    while i < len(args_part) and depth:
+        if args_part[i] == "(":
+            depth += 1
+        elif args_part[i] == ")":
+            depth -= 1
+        i += 1
+    args = args_part[:i - 1] if depth == 0 else args_part
+    attrs = args_part[i:]
+
+    res_elems, res_bytes, _ = _shape_info(result_part)
+    mdt = _SHAPE_RE.search(result_part)
+    result_dtype = mdt.group(1) if mdt else ""
+    operands = _REF_RE.findall(args)
+
+    mc_ = _COND_RE.search(attrs)
+    mb_ = _BODY_RE.search(attrs)
+    calls = []
+    for m in _CALL_ATTR_RE.finditer(attrs):
+        grp = m.group(1) or m.group(2)
+        for c in grp.split(","):
+            c = c.strip().lstrip("%")
+            if c:
+                calls.append(c)
+    mt = _TRIP_RE.search(attrs)
+    msc = _SCOPE_RE.search(attrs)
+
+    return Instr(name=name, opcode=opcode, result_bytes=res_bytes,
+                 result_elems=res_elems, operands=operands, attrs=attrs,
+                 rhs=rhs,
+                 cond=mc_.group(1).lstrip("%") if mc_ else None,
+                 body=mb_.group(1).lstrip("%") if mb_ else None,
+                 calls=calls, trip=int(mt.group(1)) if mt else None,
+                 scope=msc.group(1) if msc else None,
+                 is_root=s.startswith("ROOT"),
+                 result_dtype=result_dtype)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        s = raw.strip()
+        if cur is None:
+            # computation header: [ENTRY] %name (params...) -> type {
+            if s.endswith("{") and (s.startswith("%") or
+                                    s.startswith("ENTRY")):
+                hdr = s[:-1].strip()
+                is_entry = hdr.startswith("ENTRY")
+                hdr2 = hdr.removeprefix("ENTRY").strip()
+                if hdr2.startswith("%") and "(" in hdr2:
+                    name = hdr2[1:hdr2.index("(")].strip().rstrip(".")
+                    name = name.strip()
+                    cur = Computation(name=name)
+                    if is_entry:
+                        entry = name
+            continue
+        if s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        ins = _parse_instr(raw)
+        if ins:
+            cur.instrs.append(ins)
+            # record result shape for operand resolution
+            mres = _SHAPE_RE.search(ins.rhs[:ins.rhs.find(ins.opcode + "(")])
+            _, rb, rd = _shape_info(
+                ins.rhs[:ins.rhs.find(ins.opcode + "(")])
+            cur.symbols[ins.name] = (rb, rd)
+    return comps, entry
+
+
+def _operand_bytes(comp: Computation, global_syms: Dict, ins: Instr) -> int:
+    tot = 0
+    for o in ins.operands:
+        e = comp.symbols.get(o) or global_syms.get(o)
+        if e:
+            tot += e[0]
+    return tot
+
+
+def _fusion_bytes(comp: Computation, comps: Dict, global_syms: Dict,
+                  ins: Instr) -> float:
+    """Fusion HBM bytes = result + per-operand reads, where an operand whose
+    fused-computation parameter is consumed ONLY by slice/dynamic-slice/
+    gather ops is charged at the slice size (XLA fuses the scan xs
+    dynamic-slice into the body fusion; charging the full backing buffer
+    per iteration overstated gemma3-4b long_500k by ~80x — measured)."""
+    total = float(ins.result_bytes)
+    fused = None
+    for c in ins.calls:
+        fused = comps.get(c)
+        if fused is not None:
+            break
+    # map parameter index -> slice-only consumer result bytes
+    slice_charge = {}
+    if fused is not None:
+        params = {}
+        for fi in fused.instrs:
+            if fi.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", fi.rhs)
+                if m:
+                    params[fi.name] = int(m.group(1))
+        consumers: Dict[int, List[Instr]] = {}
+        for fi in fused.instrs:
+            for o in fi.operands:
+                if o in params:
+                    consumers.setdefault(params[o], []).append(fi)
+        for idx, cons in consumers.items():
+            if cons and all(c2.opcode in _SLICE_OPS for c2 in cons):
+                slice_charge[idx] = sum(c2.result_bytes for c2 in cons)
+    for i, o in enumerate(ins.operands):
+        if i in slice_charge:
+            total += slice_charge[i]
+            continue
+        e = comp.symbols.get(o) or global_syms.get(o)
+        if e:
+            total += e[0]
+    return total
+
+
+def _dot_flops(comp: Computation, global_syms: Dict, ins: Instr) -> float:
+    mc = _CONTRACT_RE.search(ins.attrs) or _CONTRACT_RE.search(ins.rhs)
+    k = 1
+    if mc is not None and ins.operands:
+        e = comp.symbols.get(ins.operands[0]) or global_syms.get(
+            ins.operands[0])
+        lhs_dims = e[1] if e else []
+        if mc.group(1):
+            for d in mc.group(1).split(","):
+                di = int(d)
+                if di < len(lhs_dims):
+                    k *= lhs_dims[di]
+    return 2.0 * ins.result_elems * k
+
+
+def analyze_hlo(text: str, breakdown: Optional[Dict] = None) -> CostTotals:
+    """breakdown: optional dict filled with computation -> (mult, CostTotals
+    per visit) for diagnosing which loop bodies dominate each term."""
+    comps, entry = parse_hlo(text)
+    global_syms: Dict[str, Tuple[int, List[int]]] = {}
+    for c in comps.values():
+        global_syms.update(c.symbols)
+
+    # fallback trip counts from condition constants
+    def cond_trip(cond_name: Optional[str]) -> int:
+        if not cond_name or cond_name not in comps:
+            return 1
+        vals = []
+        for ins in comps[cond_name].instrs:
+            for m in _CONST_RE.finditer(ins.rhs):
+                vals.append(int(m.group(1)))
+        return max(vals) if vals else 1
+
+    memo: Dict[str, CostTotals] = {}
+
+    def comp_cost(name: str, top_level: bool) -> CostTotals:
+        key = f"{name}|{top_level}"
+        if key in memo:
+            return memo[key]
+        memo[key] = CostTotals()  # break cycles
+        comp = comps.get(name)
+        tot = CostTotals()
+        if comp is None:
+            return tot
+        # scope maps for vmem-resident (kernel-fused) regions; fusions
+        # inherit the majority scope of their fused computation
+        def _fusion_scope(ins):
+            if ins.scope:
+                return ins.scope
+            if ins.opcode != "fusion":
+                return None
+            votes = {}
+            for c in ins.calls:
+                inner = comps.get(c)
+                if not inner:
+                    continue
+                for ii in inner.instrs:
+                    if ii.scope:
+                        votes[ii.scope] = votes.get(ii.scope, 0) + 1
+                n = max(len(inner.instrs), 1)
+                for sc, k in votes.items():
+                    if k >= 0.5 * n:
+                        return sc
+            return None
+
+        for i in comp.instrs:
+            if i.opcode == "fusion" and not i.scope:
+                i.scope = _fusion_scope(i)
+        producer_scope = {i.name: i.scope for i in comp.instrs}
+        consumers: Dict[str, List[Instr]] = {}
+        for i in comp.instrs:
+            for o in i.operands:
+                consumers.setdefault(o, []).append(i)
+
+        def scoped_bytes(ins: Instr) -> float:
+            """HBM bytes for an instr inside a vmem: scope — only data
+            crossing the scope boundary counts (models a Pallas kernel
+            keeping the region in VMEM)."""
+            b = 0.0
+            for o in ins.operands:
+                if producer_scope.get(o) == ins.scope:
+                    continue  # produced inside the fused region
+                e = comp.symbols.get(o) or global_syms.get(o)
+                if e:
+                    if ins.opcode in _SLICE_OPS:
+                        b += ins.result_bytes  # reads only the slice
+                    else:
+                        b += e[0]
+            cons = consumers.get(ins.name, [])
+            escapes = ins.is_root or not cons or any(
+                c.scope != ins.scope for c in cons)
+            if escapes:
+                b += ins.result_bytes
+            return b
+
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                trip = ins.trip if ins.trip else cond_trip(ins.cond)
+                if ins.body:
+                    tot.add(comp_cost(ins.body, True), mult=max(trip, 1))
+                continue
+            if ins.opcode == "fusion":
+                tot.bytes_accessed += (
+                    scoped_bytes(ins) if ins.scope else
+                    _fusion_bytes(comp, comps, global_syms, ins))
+                for c in ins.calls:
+                    inner = comp_cost(c, False)
+                    tot.flops += inner.flops
+                    for k, v in inner.coll_bytes.items():
+                        tot.coll_bytes[k] = tot.coll_bytes.get(k, 0) + v
+                continue
+            if ins.opcode in ("call", "conditional", "custom-call"):
+                tot.bytes_accessed += (
+                    _operand_bytes(comp, global_syms, ins) + ins.result_bytes)
+                for c in ins.calls:
+                    tot.add(comp_cost(c, True))
+                continue
+            base = (ins.opcode[:-6] if ins.opcode.endswith("-start")
+                    else ins.opcode)
+            if base in _COLL_KINDS and not ins.opcode.endswith("-done"):
+                ob = _operand_bytes(comp, global_syms, ins)
+                tot.coll_bytes[base] = tot.coll_bytes.get(base, 0) + ob
+                norm = ob * (0.5 if ins.result_dtype in ("f32", "f64")
+                             else 1.0)
+                tot.coll_bytes_norm[base] = (
+                    tot.coll_bytes_norm.get(base, 0) + norm)
+                tot.bytes_accessed += ob + ins.result_bytes
+                continue
+            if ins.opcode in _FREE_OPS or ins.opcode.endswith("-done"):
+                continue
+            if ins.opcode == "dot":
+                tot.flops += _dot_flops(comp, global_syms, ins)
+                if top_level:
+                    tot.bytes_accessed += (
+                        scoped_bytes(ins) if ins.scope else
+                        _operand_bytes(comp, global_syms, ins)
+                        + ins.result_bytes)
+                continue
+            if not top_level:
+                continue
+            if ins.scope:
+                tot.bytes_accessed += scoped_bytes(ins)
+                continue
+            if ins.opcode in _SLICE_OPS:
+                # only the moved slice touches HBM, not the backing buffer
+                tot.bytes_accessed += 2 * ins.result_bytes
+                continue
+            if ins.opcode in _UPDATE_OPS:
+                upd = 0
+                if len(ins.operands) >= 2:
+                    e = (comp.symbols.get(ins.operands[1])
+                         or global_syms.get(ins.operands[1]))
+                    upd = e[0] if e else 0
+                tot.bytes_accessed += 2 * upd
+                continue
+            tot.bytes_accessed += (
+                _operand_bytes(comp, global_syms, ins) + ins.result_bytes)
+        memo[key] = tot
+        return tot
+
+    if entry is None:
+        return CostTotals()
+    total = comp_cost(entry, True)
+    if breakdown is not None:
+        # reachability multipliers
+        mult: Dict[str, float] = {}
+
+        def visit(name: str, m: float):
+            comp = comps.get(name)
+            if comp is None or mult.get(name, 0) >= m:
+                return
+            mult[name] = m
+            for ins in comp.instrs:
+                if ins.opcode == "while":
+                    if ins.body:
+                        visit(ins.body, m * max(ins.trip or 1, 1))
+                elif ins.opcode in ("call", "conditional"):
+                    for c in ins.calls:
+                        visit(c, m)
+        visit(entry, 1.0)
+        for name, m in mult.items():
+            breakdown[name] = (m, comp_cost(name, True))
+    return total

@@ -1,0 +1,94 @@
+"""Debug helpers over the HLO cost model: top contributors to each
+roofline term, with while-trip multipliers applied.  This is the
+"profiler" of the dry-run workflow (DESIGN.md: the profile is the lowered
+IR, not a wall-clock trace)."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.hlo_cost import (_COLL_KINDS, _FREE_OPS, _SLICE_OPS,
+                                 _UPDATE_OPS, Computation, CostTotals,
+                                 _dot_flops, _operand_bytes, parse_hlo)
+
+
+def top_contributors(text: str, *, key: str = "bytes", n: int = 25
+                     ) -> List[Tuple[float, str, str, str]]:
+    """Returns [(cost, computation, opcode, snippet)] sorted desc.
+
+    key: "bytes" | "flops" | "coll".
+    """
+    comps, entry = parse_hlo(text)
+    global_syms: Dict[str, Tuple[int, List[int]]] = {}
+    for c in comps.values():
+        global_syms.update(c.symbols)
+
+    # compute the trip multiplier of every computation reachable from entry
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        if name in mult and mult[name] >= m:
+            return
+        mult[name] = max(mult.get(name, 0.0), m)
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                trip = ins.trip or 1
+                if ins.body:
+                    visit(ins.body, m * max(trip, 1))
+                if ins.cond:
+                    visit(ins.cond, m)
+            else:
+                for c in ins.calls:
+                    visit(c, m)
+
+    if entry is None:
+        return []
+    visit(entry, 1.0)
+
+    rows = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        fused = "fused" in cname
+        for ins in comp.instrs:
+            if ins.opcode in _FREE_OPS or ins.opcode == "while":
+                continue
+            cost = 0.0
+            base = (ins.opcode[:-6] if ins.opcode.endswith("-start")
+                    else ins.opcode)
+            if key == "flops":
+                if ins.opcode == "dot":
+                    cost = _dot_flops(comp, global_syms, ins) * m
+            elif key == "coll":
+                if base in _COLL_KINDS and not ins.opcode.endswith("-done"):
+                    cost = _operand_bytes(comp, global_syms, ins) * m
+            else:  # bytes
+                if fused:
+                    continue  # fusion internals are free
+                if ins.opcode in _SLICE_OPS:
+                    cost = 2 * ins.result_bytes * m
+                elif ins.opcode in _UPDATE_OPS:
+                    upd = 0
+                    if len(ins.operands) >= 2:
+                        e = (comp.symbols.get(ins.operands[1])
+                             or global_syms.get(ins.operands[1]))
+                        upd = e[0] if e else 0
+                    cost = 2 * upd * m
+                elif ins.opcode.endswith("-done"):
+                    cost = 0
+                else:
+                    cost = (_operand_bytes(comp, global_syms, ins)
+                            + ins.result_bytes) * m
+            if cost > 0:
+                rows.append((cost, cname[:45], ins.opcode,
+                             ins.rhs[:130]))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:n]
+
+
+def print_top(text: str, key: str = "bytes", n: int = 20):
+    for cost, cname, op, snip in top_contributors(text, key=key, n=n):
+        print(f"{cost:10.3e}  {op:22s} {cname:45s} {snip}")

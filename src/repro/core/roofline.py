@@ -1,0 +1,185 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Per (arch × shape × mesh) we derive the three roofline terms:
+
+    compute   = HLO_FLOPs           / (chips × peak_FLOP/s)
+    memory    = HLO_bytes_accessed  / (chips × HBM_bw)
+    collective= collective_bytes    / (chips × link_bw)
+
+``cost_analysis()`` supplies FLOPs / bytes; collective bytes are parsed
+from the optimized HLO text by summing operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(async ``-start`` counted once, ``-done`` skipped).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.config import CHIP, ChipSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+# shape token like  bf16[256,4096,5120]  or f32[] ; tuples handled separately
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok: str) -> int:
+    m = _SHAPE_RE.match(tok)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    bpe = _DTYPE_BYTES.get(dt)
+    if bpe is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * bpe
+
+
+def _operand_bytes(line: str) -> int:
+    """Sum operand shape sizes from an HLO instruction line."""
+    # operands live inside the outermost call parens:  = <ty> op-name(args...)
+    i = line.find("(")
+    if i < 0:
+        return 0
+    args = line[i + 1:]
+    total = 0
+    for m in _SHAPE_RE.finditer(args):
+        total += _shape_bytes(m.group(0))
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind operand bytes from optimized HLO text."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        # instruction name appears right after the result type
+        for kind in _COLL_KINDS:
+            # match ` <kind>(` or ` <kind>-start(`; skip -done (same bytes
+            # already counted at -start)
+            if f" {kind}(" in s or f" {kind}-start(" in s:
+                if f" {kind}-done(" in s:
+                    continue
+                out[kind] = out.get(kind, 0) + _operand_bytes(s)
+                break
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    coll_breakdown: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    tokens_per_step: int
+    bytes_per_device: Optional[float] = None
+    peak_memory_per_device: Optional[float] = None
+    ideal_bytes: Optional[float] = None     # min HBM traffic (decode cells:
+    notes: str = ""                         # params + cache once per token)
+
+    def step_time_bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def ideal_s(self) -> float:
+        """The physically ideal step time: max of the compute bound on
+        useful FLOPs and the memory bound on irreducible bytes (for decode,
+        reading weights + cache once dominates and 6·N·D is meaningless)."""
+        t = self.model_flops / (self.chips * CHIP.peak_bf16_flops)
+        if self.ideal_bytes:
+            t = max(t, self.ideal_bytes / (self.chips * CHIP.hbm_bandwidth))
+        return t
+
+    def roofline_fraction(self) -> float:
+        """ideal step time / dominant-term bound — 1.0 means the compiled
+        step sits exactly on its physical roofline."""
+        bound = self.step_time_bound_s()
+        return self.ideal_s() / bound if bound > 0 else 0.0
+
+    def mfu(self) -> float:
+        """Model FLOPs / (bound-time × chips × peak) — the projected MFU if
+        the step ran exactly at its dominant roofline bound."""
+        return self.roofline_fraction()
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=1)
+
+
+def analyze(*, arch: str, shape: str, mesh_name: str, chips: int,
+            cost: Dict, hlo_text: str, model_flops: float,
+            tokens_per_step: int, chip: ChipSpec = CHIP,
+            memory_stats: Optional[Dict] = None,
+            ideal_bytes: Optional[float] = None,
+            notes: str = "") -> RooflineReport:
+    # while-aware totals (xla cost_analysis counts scan bodies once; see
+    # repro.core.hlo_cost) — per-device, so scale by chip count for globals.
+    from repro.core.hlo_cost import analyze_hlo
+    totals = analyze_hlo(hlo_text)
+    flops = totals.flops * chips          # per-device HLO × chips = global
+    byts = totals.bytes_accessed * chips
+    coll = {k: v * chips for k, v in totals.coll_bytes.items()}
+    # the collective TERM uses dtype-normalized bytes (bf16 wires; the CPU
+    # backend's f32 dot-upcast would otherwise double every activation AR)
+    coll_total = float(totals.collective_total_norm * chips)
+
+    compute_s = flops / (chips * chip.peak_bf16_flops)
+    memory_s = byts / (chips * chip.hbm_bandwidth)
+    collective_s = coll_total / (chips * chip.ici_link_bandwidth)
+    dom = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, collective_bytes=coll_total,
+        coll_breakdown=coll, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dom, model_flops=model_flops,
+        useful_ratio=(model_flops / flops) if flops else 0.0,
+        tokens_per_step=tokens_per_step, ideal_bytes=ideal_bytes,
+        notes=notes)
+    if memory_stats:
+        rep.bytes_per_device = memory_stats.get("argument_size_in_bytes")
+        rep.peak_memory_per_device = memory_stats.get(
+            "temp_size_in_bytes")
+    return rep
+
+
+def memory_analysis_dict(compiled) -> Dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

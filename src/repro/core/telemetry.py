@@ -1,0 +1,67 @@
+"""Run telemetry (paper §8.7 lesson 3: "observability and user control —
+real-time telemetry enables human-in-the-loop optimization").
+
+``RunTelemetry`` streams JSONL step records (loss, grad-norm, step time,
+tokens/s, projected MFU vs the TPU roofline) — the signals the paper's
+practitioners watched to decide the cancellations that dominate
+Observation 1 — plus utilization summaries compatible with the cluster
+simulator's per-job records (Observation 3's methodology).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, Optional
+
+from repro.core.config import CHIP, ModelConfig, ShapeConfig
+
+
+class RunTelemetry:
+    def __init__(self, path: Optional[str], cfg: ModelConfig,
+                 shape: ShapeConfig, n_chips: int = 1):
+        self.path = pathlib.Path(path) if path else None
+        self.cfg = cfg
+        self.shape = shape
+        self.n_chips = n_chips
+        self._t_last = time.time()
+        self._fh = self.path.open("a") if self.path else None
+        self.records = []
+        self.flops_per_token = cfg.flops_per_token()
+
+    def step(self, step: int, metrics: Dict):
+        now = time.time()
+        dt = now - self._t_last
+        self._t_last = now
+        tokens = self.shape.tokens_per_step
+        rec = {
+            "step": step,
+            "time": now,
+            "step_s": dt,
+            "loss": float(metrics.get("loss", float("nan"))),
+            "grad_norm": float(metrics.get("grad_norm", float("nan"))),
+            "tokens_per_s": tokens / max(dt, 1e-9),
+            "mfu": (self.flops_per_token * tokens / max(dt, 1e-9))
+                   / (self.n_chips * CHIP.peak_bf16_flops),
+        }
+        self.records.append(rec)
+        if self._fh:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+        return rec
+
+    def utilization_summary(self, low_threshold_mfu: float = 0.05) -> Dict:
+        """Observation-3-style per-job stats from the step records."""
+        if not self.records:
+            return {}
+        mfus = [r["mfu"] for r in self.records]
+        low = sum(1 for m in mfus if m < low_threshold_mfu) / len(mfus)
+        return {
+            "mean_mfu": sum(mfus) / len(mfus),
+            "low_util_fraction": low,
+            "steps": len(self.records),
+        }
+
+    def close(self):
+        if self._fh:
+            self._fh.close()

@@ -1,0 +1,176 @@
+"""Deterministic, shardable data pipeline.
+
+Three layers, mirroring a production input stack:
+
+  * :class:`SyntheticLMDataset` — an infinite, seekable document source
+    (Zipf-distributed token ids, doc lengths ~ lognormal).  Deterministic
+    per (seed, doc_index), so any host can materialize any document —
+    the property that makes checkpoint/restart and elastic re-sharding
+    exact: resuming at step k on a different host count reproduces the
+    same global batches.
+  * :class:`PackedPipeline` — packs documents into fixed-length sequences
+    with EOS separators and produces the per-step global batch for a
+    (ModelConfig, ShapeConfig); supports `shard(host_index, host_count)`.
+  * :class:`Prefetcher` — background-thread double buffering (the
+    "storage plane must not stall the compute plane" rule, paper §4.3).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.core.config import Family, ModelConfig, ShapeConfig, StepKind
+
+
+class SyntheticLMDataset:
+    """Infinite deterministic document stream."""
+
+    def __init__(self, vocab_size: int, seed: int = 0, mean_doc_len: int = 512,
+                 zipf_a: float = 1.2):
+        self.vocab_size = vocab_size
+        self.seed = seed
+        self.mean_doc_len = mean_doc_len
+        self.zipf_a = zipf_a
+
+    def doc(self, index: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, index]))
+        ln = int(np.clip(rng.lognormal(np.log(self.mean_doc_len), 0.6),
+                         16, 8 * self.mean_doc_len))
+        # zipf-ish over vocab (rejection-free: mod into range)
+        toks = rng.zipf(self.zipf_a, size=ln) % (self.vocab_size - 2)
+        return (toks + 2).astype(np.int32)      # 0=pad, 1=eos reserved
+
+
+class PackedPipeline:
+    """Packs documents into (batch, seq) with EOS separators.
+
+    Deterministic global order; ``shard`` returns only this host's rows.
+    ``state()``/``restore()`` capture the cursor for exact checkpoint
+    resume."""
+
+    EOS = 1
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, seed: int = 0,
+                 host_index: int = 0, host_count: int = 1):
+        assert shape.global_batch % host_count == 0
+        self.cfg = cfg
+        self.shape = shape
+        self.ds = SyntheticLMDataset(cfg.vocab_size, seed)
+        self.host_index = host_index
+        self.host_count = host_count
+        # disjoint doc streams per host: cursor strides by host_count
+        self._doc_cursor = host_index
+        self._carry: Optional[np.ndarray] = None
+
+    # -- checkpointable cursor -------------------------------------------
+    def state(self) -> Dict:
+        # JSON-safe (lives in the checkpoint manifest)
+        return {"doc_cursor": self._doc_cursor,
+                "carry": None if self._carry is None
+                else [int(t) for t in self._carry]}
+
+    def restore(self, st: Dict):
+        self._doc_cursor = int(st["doc_cursor"])
+        c = st.get("carry")
+        self._carry = None if c is None else np.asarray(c, np.int32)
+
+    # ---------------------------------------------------------------------
+    def _pack_row(self, seq_len: int) -> np.ndarray:
+        parts = []
+        n = 0
+        if self._carry is not None:
+            parts.append(self._carry[:seq_len])
+            n = len(parts[0])
+            self._carry = self._carry[seq_len:] \
+                if len(self._carry) > seq_len else None
+        while n < seq_len:
+            d = self.ds.doc(self._doc_cursor)
+            self._doc_cursor += self.host_count
+            take = min(len(d), seq_len - n)
+            parts.append(d[:take])
+            n += take
+            if take < len(d):
+                self._carry = d[take:]
+            if n < seq_len:
+                parts.append(np.array([self.EOS], np.int32))
+                n += 1
+        return np.concatenate(parts)[:seq_len]
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        cfg, shape = self.cfg, self.shape
+        B = shape.global_batch // self.host_count
+        S = shape.seq_len
+        if shape.kind == StepKind.DECODE:
+            rows = np.stack([self._pack_row(1) for _ in range(B)])
+            return {"tokens": rows}
+        rows = np.stack([self._pack_row(S + 1) for _ in range(B)])
+        tokens, labels = rows[:, :-1], rows[:, 1:].copy()
+
+        if cfg.family == Family.VLM:
+            s_img = S // 4
+            s_txt = S - s_img
+            rng = np.random.default_rng(self._doc_cursor)
+            batch = {
+                "tokens": tokens[:, :s_txt],
+                "patch_embeds": rng.standard_normal(
+                    (B, s_img, cfg.frontend_dim)).astype(np.float32),
+                "positions": np.broadcast_to(
+                    np.arange(S, dtype=np.int32), (3, B, S)).copy(),
+            }
+            if shape.kind == StepKind.TRAIN:
+                batch["labels"] = labels[:, :s_txt]
+            return batch
+        if cfg.family in (Family.ENCDEC, Family.AUDIO):
+            rng = np.random.default_rng(self._doc_cursor)
+            batch = {
+                "src_embeds": rng.standard_normal(
+                    (B, S, cfg.frontend_dim)).astype(np.float32),
+                "tokens": tokens,
+            }
+            if shape.kind == StepKind.TRAIN:
+                batch["labels"] = labels
+            return batch
+        batch = {"tokens": tokens}
+        if shape.kind == StepKind.TRAIN:
+            batch["labels"] = labels
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next_batch()
+
+
+class Prefetcher:
+    """Background-thread prefetch with bounded queue (double buffering)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._it = it
+        self._done = False
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        try:
+            for item in self._it:
+                if self._done:
+                    return
+                self._q.put(item)
+        finally:
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._done = True

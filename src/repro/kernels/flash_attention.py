@@ -1,0 +1,122 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Online-softmax over KV blocks with the score tile resident in VMEM —
+the TPU-native adaptation of the memory-bounded attention the MLPerf
+GPT-3 recipe relies on (DESIGN.md C2).  Grid: (batch, heads, q_blocks,
+kv_blocks); the kv dimension is innermost and TPU grids execute
+sequentially, so the (m, l, acc) running state lives in VMEM scratch
+across kv steps.
+
+Masking is position-based ((B,S) q_pos / (B,T) k_pos with -1 = empty
+slot), so the same kernel serves training, prefill and ring-buffer
+decode.  Sliding windows ride in as a scalar-prefetch operand.
+
+Backward runs through ``repro.kernels.ref._flash``'s custom VJP (the
+recomputing flash backward); a dedicated bwd kernel is a possible further
+step and is noted in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(win_ref, qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
+                      o_ref, m_scr, l_scr, acc_scr, *, causal: bool,
+                      scale: float, kv_steps: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                       # (bq, d)
+    k = k_ref[0, 0]                       # (bk, d)
+    v = v_ref[0, 0]                       # (bk, d)
+    qp = qpos_ref[0]                      # (bq,)
+    kp = kpos_ref[0]                      # (bk,)
+    window = win_ref[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale       # (bq, bk)
+
+    valid = (kp >= 0)[None, :]
+    if causal:
+        valid &= qp[:, None] >= kp[None, :]
+    valid &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                           window=None, block_q: int = 512,
+                           block_k: int = 512, interpret: bool = False):
+    """q: (B,S,H,d); k,v: (B,T,H,d); q_pos: (B,S); k_pos: (B,T).
+
+    Returns (B,S,H,d).  Forward only — compose with the custom-VJP ref for
+    training (ops.flash_attention handles dispatch)."""
+    B, S, H, d = q.shape
+    T = k.shape[1]
+    if S % min(block_q, S) or T % min(block_k, T):
+        raise NotImplementedError("seq not divisible by block size")
+    bq, bk = min(block_q, S), min(block_k, T)
+    if window is None:
+        window = 1 << 30
+    window = jnp.asarray([window], jnp.int32)
+
+    # kernel layout: (B, H, S, d)
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    kv_steps = T // bk
+    grid = (B, H, S // bq, kv_steps)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_fwd_kernel, causal=causal,
+                          scale=1.0 / math.sqrt(d), kv_steps=kv_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, qi, ki: (0,)),          # window
+            pl.BlockSpec((1, bq), lambda b, h, qi, ki: (b, qi)),    # q_pos
+            pl.BlockSpec((1, bk), lambda b, h, qi, ki: (b, ki)),    # k_pos
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(window, q_pos.astype(jnp.int32), k_pos.astype(jnp.int32), qt, kt, vt)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,83 @@
+"""Jit-ready kernel wrappers with backend dispatch.
+
+Each op picks the Pallas TPU kernel when (a) running on TPU or (b)
+``REPRO_FORCE_PALLAS=interpret`` (CI validation on CPU), else the pure-jnp
+reference from ``repro.kernels.ref`` — which is itself production-grade
+(flash custom-VJP etc.), so models never change semantics across backends.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+def _use_pallas() -> Optional[str]:
+    """None | 'tpu' | 'interpret'."""
+    env = os.environ.get("REPRO_FORCE_PALLAS", "")
+    if env in ("interpret", "1"):
+        return "interpret"
+    try:
+        if jax.default_backend() == "tpu":
+            return "tpu"
+    except Exception:
+        pass
+    return None
+
+
+def flash_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                    softcap=None, chunk=1024):
+    mode = _use_pallas()
+    if mode is not None and softcap is None:
+        from repro.kernels.flash_attention import flash_attention_pallas
+        try:
+            return flash_attention_pallas(
+                q, k, v, q_pos, k_pos, causal=causal, window=window,
+                interpret=(mode == "interpret"))
+        except NotImplementedError:
+            pass
+    return _ref.flash_attention_ref(q, k, v, q_pos, k_pos, causal=causal,
+                                    window=window, softcap=softcap,
+                                    chunk=chunk)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.kernels.rmsnorm import rmsnorm_pallas
+        try:
+            return rmsnorm_pallas(x, scale, eps=eps,
+                                  interpret=(mode == "interpret"))
+        except NotImplementedError:
+            pass
+    return _ref.rmsnorm_ref(x, scale, eps)
+
+
+def mxp_gemm(a, b, *, block: int = 128):
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.kernels.mxp_gemm import mxp_gemm_pallas
+        try:
+            return mxp_gemm_pallas(a, b, block=block,
+                                   interpret=(mode == "interpret"))
+        except NotImplementedError:
+            pass
+    return _ref.mxp_gemm_ref(a, b, block=block)
+
+
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 256):
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.kernels.ssd_scan import ssd_scan_pallas
+        try:
+            return ssd_scan_pallas(x, dt, a, b, c, chunk=chunk,
+                                   interpret=(mode == "interpret"))
+        except NotImplementedError:
+            pass
+    from repro.models.ssm import ssd_chunked
+    y, state = ssd_chunked(x, dt, a, b, c, chunk)
+    return y, state

@@ -1,0 +1,249 @@
+"""Pure-jnp oracles for every Pallas kernel, plus the custom-VJP flash
+attention used by the model stack on CPU.
+
+``flash_attention_ref`` is the reference implementation the Pallas kernel
+is validated against AND the production CPU fallback: chunked online-softmax
+forward, score-recomputing backward (the flash algorithm), so neither pass
+materializes the (S, T) score matrix — AD through a plain ``lax.scan``
+would stack per-chunk residuals and reconstruct the full S² buffer
+(measured: 2.5 TB/device bytes term on qwen3-32b train_4k).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+POS_BIG = 1e30
+
+
+# ---------------------------------------------------------------------------
+# flash attention (oracle + CPU production path)
+def _masked_scores(q, kc, q_pos, kc_pos, *, causal, window, softcap, scale):
+    """q: (B,S,H,d); kc: (B,t,H,d) -> masked scores f32 (B,H,S,t)."""
+    s = jnp.einsum("bshd,bthd->bhst", q, kc,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (kc_pos >= 0)[:, None, None, :]                  # (B,1,1,t)
+    if causal:
+        valid = valid & (q_pos[:, None, :, None] >= kc_pos[:, None, None, :])
+    # window: traced scalar allowed (per-layer local/global patterns)
+    valid = valid & ((q_pos[:, None, :, None] - kc_pos[:, None, None, :])
+                     < window)
+    return jnp.where(valid, s, NEG_INF)
+
+
+def _flash_fwd_impl(q, k, v, q_pos, k_pos, window, *, causal, softcap,
+                    chunk):
+    B, S, H, d = q.shape
+    T = k.shape[1]
+    c = min(chunk, T)
+    n = T // c
+    scale = 1.0 / math.sqrt(d)
+    kc = jnp.moveaxis(k.reshape(B, n, c, H, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n, c, H, d), 1, 0)
+    pc = jnp.moveaxis(k_pos.reshape(B, n, c), 1, 0)
+
+    def body(carry, xs):
+        # vmem:flash — on TPU this whole region is one Pallas kernel whose
+        # score block never leaves VMEM; the roofline cost model discounts
+        # intra-scope traffic accordingly (repro.core.hlo_cost).
+        with jax.named_scope("vmem:flash"):
+            m, l, acc = carry
+            kci, vci, pci = xs
+            s = _masked_scores(q, kci, q_pos, pci, causal=causal,
+                               window=window, softcap=softcap, scale=scale)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhst,bthd->bhsd", p.astype(q.dtype), vci,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None])
+    out = jnp.moveaxis(out, 1, 2).astype(q.dtype)            # (B,S,H,d)
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), POS_BIG)
+    return out, lse                                           # lse: (B,H,S)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(static, q, k, v, q_pos, k_pos, window):
+    causal, softcap, chunk = static
+    out, _ = _flash_fwd_impl(q, k, v, q_pos, k_pos, window, causal=causal,
+                             softcap=softcap, chunk=chunk)
+    return out
+
+
+def _flash_fwd(static, q, k, v, q_pos, k_pos, window):
+    causal, softcap, chunk = static
+    out, lse = _flash_fwd_impl(q, k, v, q_pos, k_pos, window, causal=causal,
+                               softcap=softcap, chunk=chunk)
+    return out, (q, k, v, q_pos, k_pos, window, out, lse)
+
+
+def _flash_bwd(static, res, dout):
+    causal, softcap, chunk = static
+    q, k, v, q_pos, k_pos, window, out, lse = res
+    B, S, H, d = q.shape
+    T = k.shape[1]
+    c = min(chunk, T)
+    n = T // c
+    scale = 1.0 / math.sqrt(d)
+
+    do32 = dout.astype(jnp.float32)
+    o32 = out.astype(jnp.float32)
+    # D = rowsum(dO ∘ O): (B,H,S)
+    delta = jnp.einsum("bshd,bshd->bhs", do32, o32)
+
+    kc = jnp.moveaxis(k.reshape(B, n, c, H, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n, c, H, d), 1, 0)
+    pc = jnp.moveaxis(k_pos.reshape(B, n, c), 1, 0)
+
+    def body(dq_acc, xs):
+        with jax.named_scope("vmem:flashbwd"):
+            kci, vci, pci = xs
+            s = _masked_scores(q, kci, q_pos, pci, causal=causal,
+                               window=window, softcap=softcap, scale=scale)
+            p = jnp.exp(s - lse[..., None])                    # (B,H,S,t)
+            dp = jnp.einsum("bshd,bthd->bhst", do32,
+                            vci.astype(jnp.float32))
+            dv_c = jnp.einsum("bhst,bshd->bthd", p, do32)
+            ds = p * (dp - delta[..., None])                   # d(scores)
+            if softcap is not None:
+                # s = cap·tanh(s0/cap) => ds0 = ds·(1-(s/cap)²); clip guards
+                # masked NEG_INF entries (p=0 there)
+                ds = ds * (1.0 - jnp.square(
+                    jnp.clip(s / softcap, -1.0, 1.0)))
+            ds = ds * scale
+            dq_acc = dq_acc + jnp.einsum("bhst,bthd->bshd", ds,
+                                         kci.astype(jnp.float32))
+            dk_c = jnp.einsum("bhst,bshd->bthd", ds, q.astype(jnp.float32))
+            return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, S, H, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (kc, vc, pc))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, T, H, d)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, T, H, d)
+    zero_pos = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            zero_pos(q_pos), zero_pos(k_pos), zero_pos(window))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_ref(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                        softcap=None, chunk=1024):
+    """Flash attention, pure-jnp with flash (recomputing) backward.
+
+    q: (B,S,H,d); k, v: (B,T,H,d); q_pos: (B,S); k_pos: (B,T) int32 with
+    -1 marking empty cache slots.  ``window`` may be None, a python int, or
+    a traced scalar."""
+    if window is None:
+        window = jnp.asarray(1 << 30, jnp.int32)
+    window = jnp.asarray(window, jnp.int32)
+    return _flash((causal, softcap, chunk), q, k, v, q_pos, k_pos, window)
+
+
+def attention_oracle(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                     softcap=None):
+    """Naive O(S·T) reference (for tests)."""
+    if window is None:
+        window = 1 << 30
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (k_pos >= 0)[:, None, None, :]
+    if causal:
+        valid = valid & (q_pos[:, None, :, None] >= k_pos[:, None, None, :])
+    valid = valid & ((q_pos[:, None, :, None] - k_pos[:, None, None, :])
+                     < window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid.any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhst,bthd->bshd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm oracle
+def rmsnorm_ref(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mixed-precision (emulated fp8) blocked GEMM oracle — HPL-MxP adaptation
+def quantize_e4m3_ref(x):
+    """Emulated e4m3 quantization: clamp + round-to-nearest in the e4m3
+    grid via float32 bit manipulation (matches kernels/mxp_gemm)."""
+    # e4m3fn: max 448, min normal 2^-6; we emulate with scale-free rounding
+    # to 3 mantissa bits.
+    x = jnp.clip(x, -448.0, 448.0)
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    # keep 3 mantissa bits (drop 20), round-to-nearest-even approximation
+    round_bit = jnp.uint32(1 << 19)
+    bits = (bits + round_bit) & jnp.uint32(0xFFF00000)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def mxp_gemm_ref(a, b, *, block: int = 128):
+    """Blocked GEMM with per-block max-abs scaling + e4m3-emulated operands,
+    fp32 accumulation.  a: (M,K) b: (K,N) -> (M,N) f32."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    # per (row-block × k-block) scales
+    def scale_quant(x, axis_block, axis):
+        # reshape into blocks along `axis`, scale each block to e4m3 range
+        return x
+    # straightforward oracle: quantize with per-tile scaling at tile loop
+    nb = K // block
+    acc = jnp.zeros((M, N), jnp.float32)
+    for i in range(nb):
+        at = a32[:, i * block:(i + 1) * block]
+        bt = b32[i * block:(i + 1) * block, :]
+        sa = jnp.maximum(jnp.max(jnp.abs(at), axis=1, keepdims=True), 1e-30)
+        sb = jnp.maximum(jnp.max(jnp.abs(bt), axis=0, keepdims=True), 1e-30)
+        aq = quantize_e4m3_ref(at / sa * 448.0) / 448.0 * sa
+        bq = quantize_e4m3_ref(bt / sb * 448.0) / 448.0 * sb
+        acc = acc + aq @ bq
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD chunk-scan oracle (sequential, exact)
+def ssd_scan_ref(x, dt, a, b, c, *, chunk: int):
+    """Identical math to repro.models.ssm.ssd_chunked; kept separate so the
+    Pallas kernel has an independent oracle.  x:(B,S,H,P) dt:(B,S,H) a:(H,)
+    b,c:(B,S,N)."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    dtA = (dt * a).astype(jnp.float32)                 # (B,S,H)
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        decay = jnp.exp(dtA[:, t])                     # (B,H)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xdt[:, t], b[:, t].astype(jnp.float32))
+        ys.append(jnp.einsum("bhpn,bn->bhp", state,
+                             c[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1).astype(x.dtype), state

@@ -1,0 +1,104 @@
+"""Cell construction shared by the dry-run, roofline benches and tests.
+
+A *cell* is one (architecture × shape) pair.  ``build_cell`` assembles the
+step function, abstract inputs and in/out shardings for lowering on a given
+mesh — without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.config import (ModelConfig, OptimizerConfig, ParallelConfig,
+                               RunConfig, SHAPES, ShapeConfig, StepKind,
+                               shape_applicable)
+from repro.models.model import build_model, input_logical_axes, input_specs
+from repro.parallel import sharding as shd
+from repro.train.step import (abstract_train_state, make_train_step,
+                              train_state_logical_axes)
+from repro.serving.engine import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    run_cfg: RunConfig
+    fn: Any                  # step callable
+    abstract_args: Tuple     # positional abstract inputs
+    in_shardings: Tuple
+    out_shardings: Any
+    notes: str = ""
+
+
+def _tree_shardings(abstract, axes, mesh, rules):
+    from repro.parallel.sharding import LogicalAxes, named_sharding
+
+    def one(sds, names):
+        return named_sharding(tuple(names), sds.shape, mesh, rules)
+    return jax.tree.map(one, abstract, axes,
+                        is_leaf=lambda t: isinstance(t, LogicalAxes)
+                        or (isinstance(t, tuple)
+                            and all(isinstance(e, (str, type(None)))
+                                    for e in t)))
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               rules=None, run_overrides: Optional[Dict] = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+
+    overrides = dict(run_overrides or {})
+    parallel = overrides.pop("parallel", ParallelConfig())
+    optimizer = overrides.pop("optimizer", OptimizerConfig())
+    run_cfg = RunConfig(model=cfg, shape=shape, parallel=parallel,
+                        optimizer=optimizer, **overrides)
+
+    model = build_model(cfg, remat=parallel.remat,
+                        logits_chunk=512)
+
+    batch_abs = input_specs(cfg, shape)
+    batch_axes = input_logical_axes(cfg, shape)
+    batch_sh = _tree_shardings(batch_abs, batch_axes, mesh, rules)
+
+    if shape.kind == StepKind.TRAIN:
+        state_abs = abstract_train_state(model, run_cfg)
+        state_axes = train_state_logical_axes(model, run_cfg)
+        state_sh = _tree_shardings(state_abs, state_axes, mesh, rules)
+        fn = make_train_step(model, run_cfg)
+        return Cell(arch, shape, cfg, run_cfg, fn,
+                    (state_abs, batch_abs),
+                    (state_sh, batch_sh), (state_sh, None))
+
+    # serving: bf16 params, no optimizer state
+    params_abs = model.abstract_params(jnp.bfloat16)
+    params_axes = model.logical_axes()
+    params_sh = _tree_shardings(params_abs, params_axes, mesh, rules)
+
+    if shape.kind == StepKind.PREFILL:
+        fn = make_prefill_step(model)
+        return Cell(arch, shape, cfg, run_cfg, fn,
+                    (params_abs, batch_abs),
+                    (params_sh, batch_sh), None)
+
+    # decode: cache of seq_len populated, one new token
+    cache_abs = model.cache_spec(shape.global_batch, shape.seq_len)
+    cache_axes = model.cache_logical_axes(cache_abs)
+    cache_sh = _tree_shardings(cache_abs, cache_axes, mesh, rules)
+    fn = make_decode_step(model)
+    return Cell(arch, shape, cfg, run_cfg, fn,
+                (params_abs, cache_abs, batch_abs),
+                (params_sh, cache_sh, batch_sh),
+                (None, cache_sh))
+
+
+class SkipCell(Exception):
+    """Raised when a (arch × shape) cell is inapplicable (documented skip)."""

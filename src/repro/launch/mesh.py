@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module does not touch jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and only then calls it.
+
+Mesh semantics (DESIGN.md §2): ``pod`` is the paper's cross-pod spine hop
+(2 pods × 8 leaf switches), ``data`` the intra-pod data-parallel/FSDP rail
+group, ``model`` the tensor-parallel rail set within a node group.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """General mesh for tests / pipeline / EP experiments."""
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_chips(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,79 @@
+"""Batched serving driver: continuous-batching style loop over prefill +
+decode steps with a shared KV/SSM cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b \
+        --requests 8 --prefill-len 64 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models.model import build_model
+from repro.serving.engine import make_decode_step, make_prefill_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prefill-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg, remat="none")
+    params = model.init(jax.random.key(args.seed), dtype=jnp.float32)
+
+    B, S = args.requests, args.prefill_len
+    rng = np.random.default_rng(args.seed)
+    prompt = jnp.asarray(rng.integers(2, cfg.vocab_size, (B, S)), jnp.int32)
+
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model))
+
+    batch = {"tokens": prompt}
+    if cfg.m_rope_sections is not None:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        batch["positions"] = jnp.broadcast_to(pos, (3, B, S))
+    if cfg.frontend_dim and cfg.family.value in ("encdec", "audio"):
+        batch["src_embeds"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.frontend_dim)), jnp.bfloat16)
+
+    t0 = time.time()
+    tok, cache = prefill(params, batch)
+    t_prefill = time.time() - t0
+
+    outs = [tok]
+    t0 = time.time()
+    for i in range(args.max_new - 1):
+        db = {"tokens": tok[:, None]}
+        if cfg.m_rope_sections is not None:
+            db["positions"] = jnp.broadcast_to(
+                cache["len"], (3, B, 1)).astype(jnp.int32)
+        tok, cache = decode(params, cache, db)
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = jnp.stack(outs, axis=1)
+    tps = B * (args.max_new - 1) / max(t_decode, 1e-9)
+    print(f"prefill: {B}x{S} tokens in {t_prefill:.2f}s "
+          f"({B*S/max(t_prefill,1e-9):.0f} tok/s)")
+    print(f"decode:  {args.max_new-1} steps x {B} seqs in {t_decode:.2f}s "
+          f"({tps:.1f} tok/s)")
+    print(f"sample continuation[0]: {gen[0, :12].tolist()}")
+    assert not bool(jnp.isnan(gen).any())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

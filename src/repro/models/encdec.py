@@ -1,0 +1,249 @@
+"""Encoder-decoder backbone (SeamlessM4T-medium assignment).
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (``src_embeds``) from ``input_specs()``.
+Encoder: bidirectional self-attention.  Decoder: causal self-attention +
+cross-attention into encoder memory.  Decode caches both the decoder self
+KV and the (per-layer, precomputed) cross KV.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models import layers as L
+from repro.models.param import PDef, abstract_tree, axes_tree, init_tree, \
+    stack_defs
+from repro.models.lm import chunked_softmax_xent
+from repro.parallel.sharding import constrain
+
+
+def _enc_block_defs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": L.rmsnorm_defs(cfg.d_model),
+        "attn": L.attention_defs(cfg),
+        "ln2": L.rmsnorm_defs(cfg.d_model),
+        "mlp": L.mlp_defs(cfg),
+    }
+
+
+def _dec_block_defs(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": L.rmsnorm_defs(cfg.d_model),
+        "self_attn": L.attention_defs(cfg),
+        "ln_x": L.rmsnorm_defs(cfg.d_model),
+        "cross_attn": L.attention_defs(cfg),
+        "ln2": L.rmsnorm_defs(cfg.d_model),
+        "mlp": L.mlp_defs(cfg),
+    }
+
+
+def encdec_param_defs(cfg: ModelConfig) -> Dict:
+    return {
+        "embed": L.embed_defs(cfg),
+        "src_proj": {"w": PDef((cfg.frontend_dim, cfg.d_model),
+                               ("frontend", "embed"))},
+        "enc_layers": stack_defs(_enc_block_defs(cfg), cfg.encoder_layers),
+        "enc_norm": L.rmsnorm_defs(cfg.d_model),
+        "dec_layers": stack_defs(_dec_block_defs(cfg), cfg.num_layers),
+        "final_norm": L.rmsnorm_defs(cfg.d_model),
+    }
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig, *, remat: str = "full",
+                 logits_chunk: int = 512, **_):
+        self.cfg = cfg
+        self.remat = remat
+        self.logits_chunk = logits_chunk
+
+    def param_defs(self) -> Dict:
+        return encdec_param_defs(self.cfg)
+
+    def init(self, key, dtype=jnp.float32) -> Dict:
+        return init_tree(key, self.param_defs(), dtype)
+
+    def abstract_params(self, dtype=jnp.float32) -> Dict:
+        return abstract_tree(self.param_defs(), dtype)
+
+    def logical_axes(self) -> Dict:
+        return axes_tree(self.param_defs())
+
+    def _maybe_remat(self, fn):
+        if self.remat == "none":
+            return fn
+        return jax.checkpoint(fn)
+
+    # ------------------------------------------------------------------
+    def encode(self, params, src_embeds) -> jax.Array:
+        cfg = self.cfg
+        x = jnp.einsum("bsd,de->bse", src_embeds.astype(jnp.bfloat16),
+                       params["src_proj"]["w"].astype(jnp.bfloat16))
+        x = constrain(x, "batch", None, "act_embed")
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+        def body(h, p_l):
+            hn = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+            a = L.attention(p_l["attn"], hn, cfg, positions=positions,
+                            causal=False)
+            h = h + a
+            hn = L.rms_norm(h, p_l["ln2"]["scale"], cfg.rms_eps)
+            return h + L.mlp(p_l["mlp"], hn, cfg), None
+
+        body = self._maybe_remat(body)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return L.rms_norm(x, params["enc_norm"]["scale"], cfg.rms_eps)
+
+    def _decode_full(self, params, tokens, memory) -> jax.Array:
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, cfg, jnp.bfloat16)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+        def body(h, p_l):
+            hn = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+            a = L.attention(p_l["self_attn"], hn, cfg, positions=positions)
+            h = h + a
+            hn = L.rms_norm(h, p_l["ln_x"]["scale"], cfg.rms_eps)
+            ca = L.attention(p_l["cross_attn"], hn, cfg, positions=positions,
+                             causal=False, kv_x=memory, use_rope=False)
+            h = h + ca
+            hn = L.rms_norm(h, p_l["ln2"]["scale"], cfg.rms_eps)
+            return h + L.mlp(p_l["mlp"], hn, cfg), None
+
+        body = self._maybe_remat(body)
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        return L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict]:
+        memory = self.encode(params, batch["src_embeds"])
+        y = self._decode_full(params, batch["tokens"], memory)
+        loss, z = chunked_softmax_xent(y, params["embed"], self.cfg,
+                                       batch["labels"],
+                                       chunk=self.logits_chunk)
+        return loss + 1e-4 * z, {"xent": loss, "z_loss": z,
+                                 "aux_loss": jnp.zeros(())}
+
+    # ------------------------------------------------------------------
+    def cache_spec(self, batch_size: int, cache_len: int,
+                   src_len: Optional[int] = None) -> Dict:
+        cfg = self.cfg
+        src_len = src_len or cache_len
+        Lr, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+        kv = lambda s: jax.ShapeDtypeStruct(
+            (Lr, batch_size, s, K, hd), jnp.bfloat16)
+        return {
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+            "k": kv(cache_len), "v": kv(cache_len),
+            "pos": jax.ShapeDtypeStruct((Lr, batch_size, cache_len),
+                                        jnp.int32),
+            "cross_k": kv(src_len), "cross_v": kv(src_len),
+        }
+
+    def cache_logical_axes(self, spec: Dict) -> Dict:
+        names = {
+            "len": (),
+            "k": ("layers", "cache_batch", "cache_seq", "cache_kv",
+                  "cache_kv_dim"),
+            "v": ("layers", "cache_batch", "cache_seq", "cache_kv",
+                  "cache_kv_dim"),
+            "pos": ("layers", "cache_batch", "cache_seq"),
+            "cross_k": ("layers", "cache_batch", "cache_seq", "cache_kv",
+                        "cache_kv_dim"),
+            "cross_v": ("layers", "cache_batch", "cache_seq", "cache_kv",
+                        "cache_kv_dim"),
+        }
+        return {k: names[k] for k in spec}
+
+    def init_cache(self, batch_size: int, cache_len: int,
+                   src_len: Optional[int] = None) -> Dict:
+        spec = self.cache_spec(batch_size, cache_len, src_len)
+
+        def zero(s):
+            if s.dtype == jnp.int32 and s.shape:
+                return jnp.full(s.shape, -1, s.dtype)
+            return jnp.zeros(s.shape, s.dtype)
+        out = jax.tree.map(zero, spec)
+        out["len"] = jnp.zeros((), jnp.int32)
+        return out
+
+    def prefill(self, params, batch) -> Tuple[jax.Array, Dict]:
+        """Encode source + prefill decoder self/cross caches."""
+        cfg = self.cfg
+        memory = self.encode(params, batch["src_embeds"])
+        tokens = batch["tokens"]
+        B, Sq = tokens.shape
+        x = L.embed(params["embed"], tokens, cfg, jnp.bfloat16)
+        positions = jnp.arange(Sq, dtype=jnp.int32)
+
+        def body(h, p_l):
+            hn = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+            k, v = L.project_kv(p_l["self_attn"], hn, cfg, positions)
+            a = L.attention(p_l["self_attn"], hn, cfg, positions=positions)
+            h = h + a
+            hn = L.rms_norm(h, p_l["ln_x"]["scale"], cfg.rms_eps)
+            ck = jnp.einsum("btd,dhk->bthk", memory,
+                            p_l["cross_attn"]["wk"].astype(memory.dtype))
+            cv = jnp.einsum("btd,dhk->bthk", memory,
+                            p_l["cross_attn"]["wv"].astype(memory.dtype))
+            ca = L.attention(p_l["cross_attn"], hn, cfg, positions=positions,
+                             causal=False, kv_x=memory, use_rope=False)
+            h = h + ca
+            hn = L.rms_norm(h, p_l["ln2"]["scale"], cfg.rms_eps)
+            return h + L.mlp(p_l["mlp"], hn, cfg), (k, v, ck, cv)
+
+        x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec_layers"])
+        x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+        logits = L.unembed(params["embed"], x[:, -1:, :], cfg)[:, 0]
+        cache = {
+            "len": jnp.asarray(Sq, jnp.int32),
+            "k": ks, "v": vs,
+            "pos": jnp.broadcast_to(positions,
+                                    (cfg.num_layers, B, Sq)).astype(jnp.int32),
+            "cross_k": cks, "cross_v": cvs,
+        }
+        return logits, cache
+
+    def decode_step(self, params, batch, cache) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        x = L.embed(params["embed"], tokens, cfg, jnp.bfloat16)
+        cur = cache["len"]
+        positions = jnp.broadcast_to(cur, (B, 1)).astype(jnp.int32)
+        slot = jnp.mod(cur, cache["k"].shape[2])
+        src_len = cache["cross_k"].shape[2]
+        cross_pos = jnp.arange(src_len, dtype=jnp.int32)
+
+        def body(h, xs):
+            p_l, kc, vc, pc, ck, cv = xs
+            hn = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+            k_new, v_new = L.project_kv(p_l["self_attn"], hn, cfg, positions)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new, slot, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new, slot, 1)
+            pc = jax.lax.dynamic_update_slice_in_dim(
+                pc, jnp.broadcast_to(cur, (B, 1)).astype(jnp.int32), slot, 1)
+            a = L.attention(p_l["self_attn"], hn, cfg, positions=positions,
+                            cache_kv=(kc, vc, pc))
+            h = h + a
+            hn = L.rms_norm(h, p_l["ln_x"]["scale"], cfg.rms_eps)
+            ca = L.attention(p_l["cross_attn"], hn, cfg, positions=positions,
+                             causal=False, use_rope=False,
+                             cache_kv=(ck, cv,
+                                       jnp.broadcast_to(cross_pos,
+                                                        (B, src_len))))
+            h = h + ca
+            hn = L.rms_norm(h, p_l["ln2"]["scale"], cfg.rms_eps)
+            return h + L.mlp(p_l["mlp"], hn, cfg), (kc, vc, pc)
+
+        x, (ks, vs, ps) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["k"], cache["v"],
+                      cache["pos"], cache["cross_k"], cache["cross_v"]))
+        x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+        logits = L.unembed(params["embed"], x, cfg)[:, 0]
+        new_cache = dict(cache)
+        new_cache.update(len=cur + 1, k=ks, v=vs, pos=ps)
+        return logits, new_cache

@@ -1,0 +1,733 @@
+"""Decoder-only LM covering the dense / MoE / SSM / hybrid / VLM families.
+
+One scan-over-layers implementation serves every assigned architecture:
+per-layer weights are stacked along a leading ``layers`` dimension and the
+block body is ``lax.scan``-ed (keeping HLO size O(1) in depth — essential
+for 96-layer GPT-3 compiles on this container).  Per-layer static structure
+(gemma3's 5:1 local:global window pattern) rides along as scanned arrays.
+
+Entry points (all functional):
+  * ``loss(params, batch)``                    — training objective
+  * ``prefill(params, batch)``                 — build a KV/SSM cache
+  * ``decode_step(params, batch, cache)``      — one token w/ cache
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import Family, ModelConfig, ShapeConfig, StepKind
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.param import (PDef, abstract_tree, axes_tree, init_tree,
+                                stack_defs)
+from repro.parallel.sharding import constrain
+
+BIG_WINDOW = 1 << 30  # "global" layers: window larger than any context
+
+
+# ---------------------------------------------------------------------------
+def _block_defs(cfg: ModelConfig) -> Dict:
+    """One decoder block's parameter definitions (pre-stacking)."""
+    if cfg.family == Family.SSM:
+        return {"mixer": S.mamba2_defs(cfg), "ln": L.rmsnorm_defs(cfg.d_model)}
+    if cfg.family == Family.HYBRID:
+        return {"mixer": S.mamba2_defs(cfg), "ln": L.rmsnorm_defs(cfg.d_model)}
+    d: Dict[str, Any] = {
+        "ln1": L.rmsnorm_defs(cfg.d_model),
+        "attn": L.attention_defs(cfg),
+        "ln2": L.rmsnorm_defs(cfg.d_model),
+    }
+    if cfg.family == Family.MOE:
+        d["moe"] = M.moe_defs(cfg)
+    else:
+        d["mlp"] = L.mlp_defs(cfg)
+    return d
+
+
+def _shared_block_defs(cfg: ModelConfig) -> Dict:
+    """Zamba2's weight-tied attention+MLP block."""
+    return {
+        "ln1": L.rmsnorm_defs(cfg.d_model),
+        "attn": L.attention_defs(cfg),
+        "ln2": L.rmsnorm_defs(cfg.d_model),
+        "mlp": L.mlp_defs(cfg),
+    }
+
+
+def decoder_param_defs(cfg: ModelConfig) -> Dict:
+    defs: Dict[str, Any] = {
+        "embed": L.embed_defs(cfg),
+        "layers": stack_defs(_block_defs(cfg), cfg.num_layers),
+        "final_norm": L.rmsnorm_defs(cfg.d_model),
+    }
+    if cfg.family == Family.HYBRID:
+        defs["shared"] = _shared_block_defs(cfg)
+    if cfg.family == Family.VLM and cfg.frontend_dim:
+        defs["patch_proj"] = {
+            "w": PDef((cfg.frontend_dim, cfg.d_model), ("frontend", "embed"))}
+    return defs
+
+
+def window_layout(cfg: ModelConfig, cache_len: int):
+    """Cache layout for windowed-attention archs (§Perf iteration C1).
+
+    Returns None for pure-global archs, else a dict:
+      local_idx / global_idx — per-layer partition (local:global patterns)
+      local_cap              — ring-buffer slots for local layers
+                               (min(window, cache_len) instead of cache_len:
+                               at 524k context this is the difference
+                               between a 73 GB and a 13 GB cache for
+                               gemma3-4b — measured 186 s vs 30 s memory
+                               terms)."""
+    if not cfg.uses_attention or (cfg.sliding_window is None):
+        return None
+    p = cfg.local_global_pattern
+    if p > 0:
+        local_idx = [i for i in range(cfg.num_layers) if i % (p + 1) != p]
+        global_idx = [i for i in range(cfg.num_layers) if i % (p + 1) == p]
+    else:
+        local_idx = list(range(cfg.num_layers))
+        global_idx = []
+    return {
+        "local_idx": tuple(local_idx),
+        "global_idx": tuple(global_idx),
+        "local_cap": min(cfg.sliding_window, cache_len),
+        "period": (p + 1) if p > 0 else 0,
+    }
+
+
+def layer_windows(cfg: ModelConfig) -> Optional[jnp.ndarray]:
+    """Per-layer attention windows as a scanned array (None = all global)."""
+    if not cfg.uses_attention:
+        return None
+    if cfg.local_global_pattern > 0:
+        pat = cfg.local_global_pattern
+        w = [cfg.sliding_window if (i % (pat + 1)) != pat else BIG_WINDOW
+             for i in range(cfg.num_layers)]
+        return jnp.asarray(w, jnp.int32)
+    if cfg.sliding_window is not None:
+        return jnp.full((cfg.num_layers,), cfg.sliding_window, jnp.int32)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Block applications (shared between train / prefill / decode)
+def _attn_mlp_block(p, x, cfg, *, positions, window, cache_kv=None,
+                    new_kv=None, moe_impl="sorted_capacity"):
+    """Returns (x, aux, (k, v)) — k,v only when projecting fresh kv.
+
+    Sequence parallelism (§Perf iteration A1): the residual stream and the
+    norm regions live seq-sharded over the `model` axis; GSPMD then lowers
+    the TP boundary collectives as reduce-scatter + all-gather instead of
+    full all-reduces (half the bytes) and the norms compute on 1/TP of the
+    tokens.  Falls back to replication automatically when seq doesn't
+    divide (decode S=1) via the logical-rule divisibility check."""
+    x = constrain(x, "batch", "act_seq", None)
+    h = L.rms_norm(x, p["ln1"]["scale"], cfg.rms_eps)
+    if cache_kv is not None:
+        a = L.attention(p["attn"], h, cfg, positions=positions,
+                        cache_kv=cache_kv, window=window)
+        kv = None
+    else:
+        a = L.attention(p["attn"], h, cfg, positions=positions, window=window)
+        kv = L.project_kv(p["attn"], h, cfg,
+                          positions if positions.ndim <= 2 else positions
+                          ) if new_kv else None
+    x = x + constrain(a, "batch", "act_seq", None)
+    h = L.rms_norm(x, p["ln2"]["scale"], cfg.rms_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        m, aux = M.moe(p["moe"], h, cfg, impl=moe_impl)
+    else:
+        m = L.mlp(p["mlp"], h, cfg)
+    return x + constrain(m, "batch", "act_seq", None), aux, kv
+
+
+def _ssm_block(p, x, cfg, cache=None, return_cache=False):
+    h = L.rms_norm(x, p["ln"]["scale"], cfg.rms_eps)
+    h = constrain(h, "batch", "act_seq", None)
+    y, new_cache = S.mamba2_block(p["mixer"], h, cfg, cache=cache,
+                                  return_cache=return_cache)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+class DecoderModel:
+    """Functional wrapper: config + param defs + step functions."""
+
+    def __init__(self, cfg: ModelConfig, *, remat: str = "full",
+                 moe_impl: str = "sorted_capacity",
+                 logits_chunk: int = 512):
+        self.cfg = cfg
+        self.remat = remat
+        self.moe_impl = moe_impl
+        self.logits_chunk = logits_chunk
+
+    # -- params ------------------------------------------------------------
+    def param_defs(self) -> Dict:
+        return decoder_param_defs(self.cfg)
+
+    def init(self, key, dtype=jnp.float32) -> Dict:
+        return init_tree(key, self.param_defs(), dtype)
+
+    def abstract_params(self, dtype=jnp.float32) -> Dict:
+        return abstract_tree(self.param_defs(), dtype)
+
+    def logical_axes(self) -> Dict:
+        return axes_tree(self.param_defs())
+
+    # -- forward core --------------------------------------------------------
+    def _maybe_remat(self, fn):
+        if self.remat == "none":
+            return fn
+        if self.remat == "selective":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            return jax.checkpoint(fn, policy=policy)
+        return jax.checkpoint(fn)  # full recompute
+
+    def _embed_inputs(self, params, batch, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"], cfg, dtype)
+        if cfg.family == Family.VLM and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(dtype)
+            pe = jnp.einsum("bsd,de->bse", pe,
+                            params["patch_proj"]["w"].astype(dtype))
+            x = jnp.concatenate([pe, x], axis=1)  # patches prefix, then text
+        return constrain(x, "batch", None, "act_embed")
+
+    def _positions(self, batch, seq_len: int):
+        cfg = self.cfg
+        if cfg.m_rope_sections is not None:
+            return batch["positions"]                      # (3, B, S)
+        if "positions" in batch:
+            return batch["positions"]
+        return jnp.arange(seq_len, dtype=jnp.int32)
+
+    def _backbone(self, params, x, positions):
+        """Training/prefill-style full-sequence pass. Returns (y, aux)."""
+        cfg = self.cfg
+        windows = layer_windows(cfg)
+
+        if cfg.family in (Family.SSM,):
+            def body(h, p_l):
+                h, _ = _ssm_block(p_l, h, cfg)
+                return h, jnp.zeros((), jnp.float32)
+            body = self._maybe_remat(body)
+            x, _ = jax.lax.scan(body, x, params["layers"])
+            aux = jnp.zeros((), jnp.float32)
+
+        elif cfg.family == Family.HYBRID:
+            x, aux = self._hybrid_backbone(params, x, positions)
+
+        else:
+            def body(h, xs):
+                p_l, win = xs
+                h, aux, _ = _attn_mlp_block(
+                    p_l, h, cfg, positions=positions, window=win,
+                    moe_impl=self.moe_impl)
+                return h, aux
+            body = self._maybe_remat(body)
+            win_arr = (windows if windows is not None
+                       else jnp.full((cfg.num_layers,), BIG_WINDOW, jnp.int32))
+            x, auxs = jax.lax.scan(body, x, (params["layers"], win_arr))
+            aux = auxs.mean()
+
+        x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+        return x, aux
+
+    def _hybrid_backbone(self, params, x, positions):
+        """Zamba2: shared attention block every ``attn_every`` SSM layers."""
+        cfg = self.cfg
+        ae = cfg.attn_every
+        ngroups, tail = divmod(cfg.num_layers, ae)
+        shared = params["shared"]
+
+        def ssm_body(h, p_l):
+            h, _ = _ssm_block(p_l, h, cfg)
+            return h, None
+        ssm_body = self._maybe_remat(ssm_body)
+
+        def shared_apply(h):
+            h, _, _ = _attn_mlp_block(shared, h, cfg, positions=positions,
+                                      window=None)
+            return h
+        shared_apply = self._maybe_remat(shared_apply)
+
+        grouped = jax.tree.map(
+            lambda a: a[:ngroups * ae].reshape((ngroups, ae) + a.shape[1:]),
+            params["layers"])
+        tail_p = jax.tree.map(lambda a: a[ngroups * ae:], params["layers"])
+
+        def group_body(h, p_g):
+            h = shared_apply(h)
+            h, _ = jax.lax.scan(ssm_body, h, p_g)
+            return h, None
+
+        x, _ = jax.lax.scan(group_body, x, grouped)
+        if tail:
+            x = shared_apply(x)
+            x, _ = jax.lax.scan(ssm_body, x, tail_p)
+        return x, jnp.zeros((), jnp.float32)
+
+    # -- losses ----------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_inputs(params, batch)
+        Sfull = x.shape[1]
+        positions = self._positions(batch, Sfull)
+        y, aux = self._backbone(params, x, positions)
+        labels = batch["labels"]
+        if cfg.family == Family.VLM and y.shape[1] != labels.shape[1]:
+            y = y[:, y.shape[1] - labels.shape[1]:]        # text positions only
+        loss, z_loss = chunked_softmax_xent(
+            y, params["embed"], cfg, labels, chunk=self.logits_chunk)
+        total = loss + 0.01 * aux + 1e-4 * z_loss
+        return total, {"xent": loss, "aux_loss": aux, "z_loss": z_loss}
+
+    # -- serving -----------------------------------------------------------
+    def cache_spec(self, batch_size: int, cache_len: int) -> Dict:
+        """Abstract cache structure (ShapeDtypeStructs) for serve shapes."""
+        cfg = self.cfg
+        c: Dict[str, Any] = {"len": jax.ShapeDtypeStruct((), jnp.int32)}
+        Lr = cfg.num_layers
+        if cfg.family in (Family.SSM, Family.HYBRID):
+            ch = cfg.d_inner + 2 * cfg.ssm_state
+            c["ssm_conv"] = jax.ShapeDtypeStruct(
+                (Lr, batch_size, cfg.ssm_conv_width - 1, ch), jnp.bfloat16)
+            c["ssm_state"] = jax.ShapeDtypeStruct(
+                (Lr, batch_size, cfg.ssm_heads, cfg.ssm_head_dim,
+                 cfg.ssm_state), jnp.float32)
+        if cfg.family == Family.HYBRID:
+            napp = -(-cfg.num_layers // cfg.attn_every)
+            c["shared_k"] = jax.ShapeDtypeStruct(
+                (napp, batch_size, cache_len, cfg.num_kv_heads, cfg.head_dim),
+                jnp.bfloat16)
+            c["shared_v"] = jax.ShapeDtypeStruct(
+                (napp, batch_size, cache_len, cfg.num_kv_heads, cfg.head_dim),
+                jnp.bfloat16)
+            c["shared_pos"] = jax.ShapeDtypeStruct(
+                (napp, batch_size, cache_len), jnp.int32)
+        elif cfg.uses_attention:
+            wl = window_layout(cfg, cache_len)
+            if wl is not None:
+                kv = lambda n, s: jax.ShapeDtypeStruct(
+                    (n, batch_size, s, cfg.num_kv_heads, cfg.head_dim),
+                    jnp.bfloat16)
+                pos = lambda n, s: jax.ShapeDtypeStruct(
+                    (n, batch_size, s), jnp.int32)
+                nloc, cap = len(wl["local_idx"]), wl["local_cap"]
+                c["k_loc"], c["v_loc"] = kv(nloc, cap), kv(nloc, cap)
+                c["pos_loc"] = pos(nloc, cap)
+                if wl["global_idx"]:
+                    ng = len(wl["global_idx"])
+                    c["k_glob"] = kv(ng, cache_len)
+                    c["v_glob"] = kv(ng, cache_len)
+                    c["pos_glob"] = pos(ng, cache_len)
+            else:
+                c["k"] = jax.ShapeDtypeStruct(
+                    (Lr, batch_size, cache_len, cfg.num_kv_heads,
+                     cfg.head_dim), jnp.bfloat16)
+                c["v"] = jax.ShapeDtypeStruct(
+                    (Lr, batch_size, cache_len, cfg.num_kv_heads,
+                     cfg.head_dim), jnp.bfloat16)
+                c["pos"] = jax.ShapeDtypeStruct(
+                    (Lr, batch_size, cache_len), jnp.int32)
+        return c
+
+    def cache_logical_axes(self, spec: Dict) -> Dict:
+        kvax = ("layers", "cache_batch", "cache_seq", "cache_kv",
+                "cache_kv_dim")
+        names = {
+            "len": (),
+            "ssm_conv": ("layers", "cache_batch", None, "act_mlp"),
+            "ssm_state": ("layers", "cache_batch", "ssm_heads", None, None),
+            "k": kvax, "v": kvax,
+            "pos": ("layers", "cache_batch", "cache_seq"),
+            "k_loc": kvax, "v_loc": kvax,
+            "pos_loc": ("layers", "cache_batch", "cache_seq"),
+            "k_glob": kvax, "v_glob": kvax,
+            "pos_glob": ("layers", "cache_batch", "cache_seq"),
+            "shared_k": ("layers", "cache_batch", "cache_seq", "cache_kv",
+                         "cache_kv_dim"),
+            "shared_v": ("layers", "cache_batch", "cache_seq", "cache_kv",
+                         "cache_kv_dim"),
+            "shared_pos": ("layers", "cache_batch", "cache_seq"),
+        }
+        return {k: names[k] for k in spec}
+
+    def init_cache(self, batch_size: int, cache_len: int) -> Dict:
+        spec = self.cache_spec(batch_size, cache_len)
+
+        def zero(s):
+            if s.dtype == jnp.int32 and s.shape and s.shape[-1] == cache_len:
+                return jnp.full(s.shape, -1, s.dtype)   # empty slots
+            return jnp.zeros(s.shape, s.dtype)
+        return jax.tree.map(zero, spec)
+
+    def prefill(self, params, batch) -> Tuple[jax.Array, Dict]:
+        """Full-sequence forward that also populates the cache.
+
+        Returns (last-token logits (B, V), cache)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, Sq, _ = x.shape
+        positions = self._positions(batch, Sq)
+        windows = layer_windows(cfg)
+        cache = {"len": jnp.asarray(Sq, jnp.int32)}
+
+        if cfg.family in (Family.SSM, Family.HYBRID):
+            def body(h, p_l):
+                hn, c = _ssm_block(p_l, h, cfg, cache=None, return_cache=True)
+                return hn, c
+            body = self._maybe_remat(body)
+            if cfg.family == Family.SSM:
+                x, caches = jax.lax.scan(body, x, params["layers"])
+                cache["ssm_conv"], cache["ssm_state"] = caches
+                cache["ssm_state"] = cache["ssm_state"].astype(jnp.float32)
+            else:
+                x, cache = self._hybrid_prefill(params, x, positions, cache,
+                                                body)
+        else:
+            def body(h, xs):
+                p_l, win = xs
+                hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+                k, v = L.project_kv(p_l["attn"], hln, cfg, positions)
+                hn, _, _ = _attn_mlp_block(p_l, h, cfg, positions=positions,
+                                           window=win, moe_impl=self.moe_impl)
+                return hn, (k, v)
+            body = self._maybe_remat(body)
+            win_arr = (windows if windows is not None
+                       else jnp.full((cfg.num_layers,), BIG_WINDOW, jnp.int32))
+            x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], win_arr))
+            pos1 = positions if positions.ndim <= 2 else positions[0]
+            pos_full = jnp.broadcast_to(
+                pos1, (cfg.num_layers, B, Sq)).astype(jnp.int32)
+            wl = window_layout(cfg, Sq)
+            if wl is None:
+                cache["k"], cache["v"], cache["pos"] = ks, vs, pos_full
+            else:
+                import numpy as _np
+                li = _np.asarray(wl["local_idx"], _np.int32)
+                gi = _np.asarray(wl["global_idx"], _np.int32)
+                cap = wl["local_cap"]
+                shift = (Sq - cap) % cap if cap else 0
+
+                def ring(a):  # keep the last `cap` tokens in ring order
+                    tail = a[:, :, Sq - cap:]
+                    return jnp.roll(tail, shift, axis=2)
+                cache["k_loc"] = ring(ks[li])
+                cache["v_loc"] = ring(vs[li])
+                cache["pos_loc"] = jnp.roll(pos_full[li][:, :, Sq - cap:],
+                                            shift, axis=2)
+                if gi.size:
+                    cache["k_glob"], cache["v_glob"] = ks[gi], vs[gi]
+                    cache["pos_glob"] = pos_full[gi]
+
+        x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+        logits = L.unembed(params["embed"], x[:, -1:, :], cfg)[:, 0]
+        return logits, cache
+
+    def _hybrid_prefill(self, params, x, positions, cache, ssm_body):
+        cfg = self.cfg
+        ae = cfg.attn_every
+        ngroups, tail = divmod(cfg.num_layers, ae)
+        B, Sq, _ = x.shape
+        shared = params["shared"]
+        sk, sv = [], []
+
+        def shared_apply(h):
+            hln = L.rms_norm(h, shared["ln1"]["scale"], cfg.rms_eps)
+            k, v = L.project_kv(shared["attn"], hln, cfg, positions)
+            hn, _, _ = _attn_mlp_block(shared, h, cfg, positions=positions,
+                                       window=None)
+            return hn, (k, v)
+
+        grouped = jax.tree.map(
+            lambda a: a[:ngroups * ae].reshape((ngroups, ae) + a.shape[1:]),
+            params["layers"])
+        tail_p = jax.tree.map(lambda a: a[ngroups * ae:], params["layers"])
+
+        convs, states = [], []
+        # python loop over groups: napp is small (<=14); keeps cache emission
+        # simple while inner ssm layers stay scanned.
+        for gi in range(ngroups):
+            x, kv = shared_apply(x)
+            sk.append(kv[0]); sv.append(kv[1])
+            p_g = jax.tree.map(lambda a: a[gi], grouped)
+            x, c = jax.lax.scan(ssm_body, x, p_g)
+            convs.append(c[0]); states.append(c[1])
+        if tail:
+            x, kv = shared_apply(x)
+            sk.append(kv[0]); sv.append(kv[1])
+            x, c = jax.lax.scan(ssm_body, x, tail_p)
+            convs.append(c[0]); states.append(c[1])
+
+        cache["shared_k"] = jnp.stack(sk)
+        cache["shared_v"] = jnp.stack(sv)
+        napp = len(sk)
+        cache["shared_pos"] = jnp.broadcast_to(
+            positions, (napp, B, Sq)).astype(jnp.int32)
+        cache["ssm_conv"] = jnp.concatenate(convs, axis=0)
+        cache["ssm_state"] = jnp.concatenate(states, axis=0).astype(
+            jnp.float32)
+        return x, cache
+
+    def decode_step(self, params, batch, cache) -> Tuple[jax.Array, Dict]:
+        """One-token decode. batch: {"tokens": (B, 1), ...}.
+
+        Returns (logits (B, V), new_cache)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B = x.shape[0]
+        cur = cache["len"]
+        if cfg.m_rope_sections is not None:
+            positions = batch.get(
+                "positions",
+                jnp.broadcast_to(cur, (3, B, 1)).astype(jnp.int32))
+        else:
+            positions = jnp.broadcast_to(cur, (B, 1)).astype(jnp.int32)
+        new_cache = dict(cache)
+        new_cache["len"] = cur + 1
+
+        if cfg.family == Family.SSM:
+            def body(h, xs):
+                p_l, conv, st = xs
+                hn, c = _ssm_block(p_l, h, cfg, cache=(conv, st))
+                return hn, c
+            x, (convs, states) = jax.lax.scan(
+                body, x, (params["layers"], cache["ssm_conv"],
+                          cache["ssm_state"]))
+            new_cache["ssm_conv"], new_cache["ssm_state"] = convs, states
+        elif cfg.family == Family.HYBRID:
+            x, new_cache = self._hybrid_decode(params, x, positions, cache,
+                                               new_cache)
+        else:
+            def make_body(win_static=None):
+                def body(h, xs):
+                    p_l, kc, vc, pc, win = xs
+                    slot = jnp.mod(cur, kc.shape[1])
+                    hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+                    k_new, v_new = L.project_kv(p_l["attn"], hln, cfg,
+                                                positions)
+                    kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new,
+                                                             slot, 1)
+                    vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new,
+                                                             slot, 1)
+                    pc = jax.lax.dynamic_update_slice_in_dim(
+                        pc, jnp.broadcast_to(cur, (B, 1)).astype(jnp.int32),
+                        slot, 1)
+                    hn, _, _ = _attn_mlp_block(
+                        p_l, h, cfg, positions=positions, window=win,
+                        cache_kv=(kc, vc, pc), moe_impl=self.moe_impl)
+                    return hn, (kc, vc, pc)
+                return body
+
+            wl = window_layout(cfg, 1 << 30)   # layout only (caps from cache)
+            if wl is None:
+                windows = layer_windows(cfg)
+                win_arr = (windows if windows is not None
+                           else jnp.full((cfg.num_layers,), BIG_WINDOW,
+                                         jnp.int32))
+                x, (ks, vs, ps) = jax.lax.scan(
+                    make_body(), x,
+                    (params["layers"], cache["k"], cache["v"], cache["pos"],
+                     win_arr))
+                new_cache["k"], new_cache["v"], new_cache["pos"] = ks, vs, ps
+            elif not wl["global_idx"]:
+                # uniform sliding window (mixtral): ring caches everywhere
+                win_arr = jnp.full((cfg.num_layers,), cfg.sliding_window,
+                                   jnp.int32)
+                x, (ks, vs, ps) = jax.lax.scan(
+                    make_body(), x,
+                    (params["layers"], cache["k_loc"], cache["v_loc"],
+                     cache["pos_loc"], win_arr))
+                new_cache["k_loc"], new_cache["v_loc"] = ks, vs
+                new_cache["pos_loc"] = ps
+            else:
+                x, new_cache = self._local_global_decode(
+                    params, x, positions, cache, new_cache, wl, cur, B)
+
+        x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+        logits = L.unembed(params["embed"], x, cfg)[:, 0]
+        return logits, new_cache
+
+    def _local_global_decode(self, params, x, positions, cache, new_cache,
+                             wl, cur, B):
+        """Decode for local:global patterns (gemma3): local layers read/write
+        ring buffers of `window` slots, global layers full caches.  Scans
+        run per period group (locals are contiguous within a group)."""
+        cfg = self.cfg
+        import numpy as _np
+        li = _np.asarray(wl["local_idx"], _np.int32)
+        gi = _np.asarray(wl["global_idx"], _np.int32)
+        p = cfg.local_global_pattern
+        params_loc = jax.tree.map(lambda a: a[li], params["layers"])
+        params_glob = jax.tree.map(lambda a: a[gi], params["layers"])
+
+        def loc_body(h, xs):
+            p_l, kc, vc, pc = xs
+            slot = jnp.mod(cur, kc.shape[1])
+            hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+            k_new, v_new = L.project_kv(p_l["attn"], hln, cfg, positions)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new, slot, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new, slot, 1)
+            pc = jax.lax.dynamic_update_slice_in_dim(
+                pc, jnp.broadcast_to(cur, (B, 1)).astype(jnp.int32), slot, 1)
+            hn, _, _ = _attn_mlp_block(
+                p_l, h, cfg, positions=positions, window=cfg.sliding_window,
+                cache_kv=(kc, vc, pc), moe_impl=self.moe_impl)
+            return hn, (kc, vc, pc)
+
+        def glob_apply(h, p_l, kc, vc, pc):
+            slot = jnp.mod(cur, kc.shape[1])
+            hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+            k_new, v_new = L.project_kv(p_l["attn"], hln, cfg, positions)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new, slot, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new, slot, 1)
+            pc = jax.lax.dynamic_update_slice_in_dim(
+                pc, jnp.broadcast_to(cur, (B, 1)).astype(jnp.int32), slot, 1)
+            hn, _, _ = _attn_mlp_block(
+                p_l, h, cfg, positions=positions, window=None,
+                cache_kv=(kc, vc, pc), moe_impl=self.moe_impl)
+            return hn, kc, vc, pc
+
+        nloc = len(li)
+        ngroups = len(gi)                       # one global per full period
+        kls, vls, pls = [], [], []
+        kgs, vgs, pgs = [], [], []
+        sl = lambda t, a, b: jax.tree.map(lambda z: z[a:b], t)
+        for g in range(ngroups):
+            lo, hi = g * p, (g + 1) * p
+            x, (kl, vl, pl) = jax.lax.scan(
+                loc_body, x,
+                (sl(params_loc, lo, hi), cache["k_loc"][lo:hi],
+                 cache["v_loc"][lo:hi], cache["pos_loc"][lo:hi]))
+            kls.append(kl); vls.append(vl); pls.append(pl)
+            pg = jax.tree.map(lambda a: a[g], params_glob)
+            x, kg, vg, pgp = glob_apply(x, pg, cache["k_glob"][g],
+                                        cache["v_glob"][g],
+                                        cache["pos_glob"][g])
+            kgs.append(kg); vgs.append(vg); pgs.append(pgp)
+        if nloc > ngroups * p:                  # trailing local layers
+            lo = ngroups * p
+            x, (kl, vl, pl) = jax.lax.scan(
+                loc_body, x,
+                (sl(params_loc, lo, nloc), cache["k_loc"][lo:],
+                 cache["v_loc"][lo:], cache["pos_loc"][lo:]))
+            kls.append(kl); vls.append(vl); pls.append(pl)
+
+        new_cache["k_loc"] = jnp.concatenate(kls, axis=0)
+        new_cache["v_loc"] = jnp.concatenate(vls, axis=0)
+        new_cache["pos_loc"] = jnp.concatenate(pls, axis=0)
+        new_cache["k_glob"] = jnp.stack(kgs)
+        new_cache["v_glob"] = jnp.stack(vgs)
+        new_cache["pos_glob"] = jnp.stack(pgs)
+        return x, new_cache
+
+    def _hybrid_decode(self, params, x, positions, cache, new_cache):
+        cfg = self.cfg
+        ae = cfg.attn_every
+        ngroups, tail = divmod(cfg.num_layers, ae)
+        B = x.shape[0]
+        cur = cache["len"]
+        slot = jnp.mod(cur, cache["shared_k"].shape[2])
+        shared = params["shared"]
+
+        def ssm_body(h, xs):
+            p_l, conv, st = xs
+            hn, c = _ssm_block(p_l, h, cfg, cache=(conv, st))
+            return hn, c
+
+        def shared_apply(h, kc, vc, pc):
+            hln = L.rms_norm(h, shared["ln1"]["scale"], cfg.rms_eps)
+            k_new, v_new = L.project_kv(shared["attn"], hln, cfg, positions)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new, slot, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new, slot, 1)
+            pc = jax.lax.dynamic_update_slice_in_dim(
+                pc, jnp.broadcast_to(cur, (B, 1)).astype(jnp.int32), slot, 1)
+            hn, _, _ = _attn_mlp_block(shared, h, cfg, positions=positions,
+                                       window=None, cache_kv=(kc, vc, pc))
+            return hn, kc, vc, pc
+
+        grouped = jax.tree.map(
+            lambda a: a[:ngroups * ae].reshape((ngroups, ae) + a.shape[1:]),
+            params["layers"])
+        conv_g = cache["ssm_conv"][:ngroups * ae].reshape(
+            (ngroups, ae) + cache["ssm_conv"].shape[1:])
+        st_g = cache["ssm_state"][:ngroups * ae].reshape(
+            (ngroups, ae) + cache["ssm_state"].shape[1:])
+
+        sks, svs, sps, convs, states = [], [], [], [], []
+        for gi in range(ngroups):
+            x, kc, vc, pc = shared_apply(
+                x, cache["shared_k"][gi], cache["shared_v"][gi],
+                cache["shared_pos"][gi])
+            sks.append(kc); svs.append(vc); sps.append(pc)
+            p_g = jax.tree.map(lambda a: a[gi], grouped)
+            x, (cv, st) = jax.lax.scan(ssm_body, x,
+                                       (p_g, conv_g[gi], st_g[gi]))
+            convs.append(cv); states.append(st)
+        if tail:
+            gi = ngroups
+            x, kc, vc, pc = shared_apply(
+                x, cache["shared_k"][gi], cache["shared_v"][gi],
+                cache["shared_pos"][gi])
+            sks.append(kc); svs.append(vc); sps.append(pc)
+            tail_p = jax.tree.map(lambda a: a[ngroups * ae:],
+                                  params["layers"])
+            x, (cv, st) = jax.lax.scan(
+                ssm_body, x,
+                (tail_p, cache["ssm_conv"][ngroups * ae:],
+                 cache["ssm_state"][ngroups * ae:]))
+            convs.append(cv); states.append(st)
+
+        new_cache["shared_k"] = jnp.stack(sks)
+        new_cache["shared_v"] = jnp.stack(svs)
+        new_cache["shared_pos"] = jnp.stack(sps)
+        new_cache["ssm_conv"] = jnp.concatenate(convs, axis=0)
+        new_cache["ssm_state"] = jnp.concatenate(states, axis=0)
+        return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+def chunked_softmax_xent(x: jax.Array, embed_params: Dict, cfg: ModelConfig,
+                         labels: jax.Array, chunk: int = 512
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy without materializing the full (B, S, V) logits.
+
+    Scans over sequence chunks; for gemma3 (V=262k) at train_4k this cuts
+    the logits intermediate from O(S·V) to O(chunk·V) per device — a memory-
+    roofline optimization recorded in EXPERIMENTS.md §Perf.  Returns
+    (mean xent over valid tokens, mean z-loss term)."""
+    B, Sq, D = x.shape
+    chunk = min(chunk, Sq)
+    if Sq % chunk:
+        chunk = Sq  # fallback: single chunk
+    n = Sq // chunk
+    xc = jnp.moveaxis(x.reshape(B, n, chunk, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+
+    @jax.checkpoint   # recompute chunk logits in bwd: without this the scan
+    def body(carry, xs):  # stacks every chunk's logits = full (B,S,V) again
+        tot, totz, cnt = carry
+        xi, li = xs
+        logits = L.unembed(embed_params, xi, cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(li, 0)[..., None], axis=-1)[..., 0]
+        valid = (li >= 0).astype(jnp.float32)
+        xent = (lse - gold) * valid
+        z = jnp.square(lse) * valid
+        return (tot + xent.sum(), totz + z.sum(), cnt + valid.sum()), None
+
+    (tot, totz, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), (xc, lc))
+    denom = jnp.maximum(cnt, 1.0)
+    return tot / denom, totz / denom

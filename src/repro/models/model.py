@@ -1,0 +1,116 @@
+"""Model factory + workload input specs.
+
+``build_model(cfg)`` returns the family-appropriate functional model.
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of a given workload shape — the dry-run lowers against these
+(weak-type-correct, shardable, no device allocation), and the data pipeline
+materializes matching concrete batches for real runs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import Family, ModelConfig, ShapeConfig, StepKind
+from repro.models.encdec import EncDecModel
+from repro.models.lm import DecoderModel
+
+
+def build_model(cfg: ModelConfig, **kw):
+    if cfg.family in (Family.ENCDEC, Family.AUDIO):
+        return EncDecModel(cfg, **kw)
+    return DecoderModel(cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _bf16(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one step of the given workload shape."""
+    B, S = shape.global_batch, shape.seq_len
+
+    if cfg.family in (Family.ENCDEC, Family.AUDIO):
+        if shape.kind == StepKind.TRAIN or shape.kind == StepKind.PREFILL:
+            return {
+                "src_embeds": _bf16((B, S, cfg.frontend_dim)),
+                "tokens": _i32((B, S)),
+                **({"labels": _i32((B, S))}
+                   if shape.kind == StepKind.TRAIN else {}),
+            }
+        return {"tokens": _i32((B, 1))}        # decode: cache supplied apart
+
+    if cfg.family == Family.VLM:
+        s_img, s_txt = S // 4, S - S // 4      # dynamic-resolution stub split
+        if shape.kind == StepKind.TRAIN:
+            return {
+                "tokens": _i32((B, s_txt)),
+                "patch_embeds": _bf16((B, s_img, cfg.frontend_dim)),
+                "positions": _i32((3, B, S)),  # M-RoPE t/h/w streams
+                "labels": _i32((B, s_txt)),
+            }
+        if shape.kind == StepKind.PREFILL:
+            return {
+                "tokens": _i32((B, s_txt)),
+                "patch_embeds": _bf16((B, s_img, cfg.frontend_dim)),
+                "positions": _i32((3, B, S)),
+            }
+        return {"tokens": _i32((B, 1)), "positions": _i32((3, B, 1))}
+
+    # plain LM families (dense / moe / ssm / hybrid)
+    if shape.kind == StepKind.TRAIN:
+        return {"tokens": _i32((B, S)), "labels": _i32((B, S))}
+    if shape.kind == StepKind.PREFILL:
+        return {"tokens": _i32((B, S))}
+    return {"tokens": _i32((B, 1))}
+
+
+def input_logical_axes(cfg: ModelConfig, shape: ShapeConfig
+                       ) -> Dict[str, Tuple]:
+    """Logical sharding axes matching ``input_specs``."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        if k == "positions":
+            out[k] = (None, "batch", None)
+        elif v.ndim == 3:
+            out[k] = ("batch", None, None)
+        else:
+            out[k] = ("batch",) + (None,) * (v.ndim - 1)
+    return out
+
+
+def make_concrete_batch(cfg: ModelConfig, shape: ShapeConfig,
+                        key: Optional[jax.Array] = None,
+                        batch_override: Optional[int] = None) -> Dict:
+    """Materialize a synthetic batch matching input_specs (smoke tests)."""
+    key = key if key is not None else jax.random.key(0)
+    specs = input_specs(cfg, shape)
+    if batch_override is not None:
+        def rebatch(s):
+            if s.shape and s.shape[0] == 3:  # positions (3, B, S)
+                return jax.ShapeDtypeStruct(
+                    (3, batch_override) + s.shape[2:], s.dtype)
+            return jax.ShapeDtypeStruct(
+                (batch_override,) + s.shape[1:], s.dtype)
+        specs = {k: rebatch(v) for k, v in specs.items()}
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if name in ("tokens", "labels"):
+            out[name] = jax.random.randint(sub, s.shape, 0, cfg.vocab_size,
+                                           jnp.int32)
+        elif name == "positions":
+            pos = jnp.arange(s.shape[-1], dtype=jnp.int32)
+            out[name] = jnp.broadcast_to(pos, s.shape)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(
+                s.dtype)
+    return out

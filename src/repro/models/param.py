@@ -1,0 +1,97 @@
+"""Parameter definition system.
+
+Every layer declares its parameters as ``PDef`` entries (shape, logical
+sharding axes, initializer).  From one nested dict of PDefs we derive:
+
+  * materialized parameters        (``init_tree`` — smoke tests / real runs)
+  * ShapeDtypeStructs              (``abstract_tree`` — dry-run, no memory)
+  * logical-axis metadata          (``axes_tree`` — sharding derivation)
+
+so init, sharding and dry-run can never drift apart.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import LogicalAxes
+
+
+@dataclass(frozen=True)
+class PDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "fan_in"        # fan_in | normal | zeros | ones | scalar
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_pdef(x) -> bool:
+    return isinstance(x, PDef)
+
+
+def stack_defs(defs: Dict, num: int) -> Dict:
+    """Prepend a scanned layer dimension to every PDef in a subtree."""
+    def one(d: PDef) -> PDef:
+        return PDef((num,) + d.shape, ("layers",) + d.axes, d.init, d.scale,
+                    d.dtype)
+    return jax.tree.map(one, defs, is_leaf=is_pdef)
+
+
+def _materialize(key, d: PDef) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "scalar":
+        return jnp.full(d.shape, d.scale, d.dtype)
+    if d.init == "normal":
+        return (d.scale * jax.random.normal(key, d.shape)).astype(d.dtype)
+    if d.init == "fan_in":
+        # truncated-normal, 1/sqrt(fan_in); fan_in = product of all dims but last
+        fan_in = max(1, math.prod(d.shape[:-1]))
+        std = d.scale / math.sqrt(fan_in)
+        return (std * jax.random.truncated_normal(
+            key, -2.0, 2.0, d.shape)).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init}")
+
+
+def init_tree(key: jax.Array, defs: Dict, dtype=None) -> Dict:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_pdef)
+    keys = jax.random.split(key, len(leaves))
+    vals = []
+    for k, d in zip(keys, leaves):
+        v = _materialize(k, d)
+        if dtype is not None and jnp.issubdtype(v.dtype, jnp.floating):
+            v = v.astype(dtype)
+        vals.append(v)
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(defs: Dict, dtype=None) -> Dict:
+    def one(d: PDef):
+        dt = dtype if (dtype is not None and
+                       jnp.issubdtype(d.dtype, jnp.floating)) else d.dtype
+        return jax.ShapeDtypeStruct(d.shape, dt)
+    return jax.tree.map(one, defs, is_leaf=is_pdef)
+
+
+def axes_tree(defs: Dict) -> Dict:
+    return jax.tree.map(lambda d: LogicalAxes(d.axes), defs, is_leaf=is_pdef)
+
+
+def param_count(defs: Dict) -> int:
+    return sum(math.prod(d.shape)
+               for d in jax.tree.leaves(defs, is_leaf=is_pdef))
+
+
+def param_bytes(defs: Dict, bytes_per_el: int = 4) -> int:
+    return param_count(defs) * bytes_per_el

@@ -1,0 +1,206 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060 in pure jnp
+(`ssd_chunked`, the oracle / production fallback) with a sequential
+``lax.scan`` over chunk states (memory-bounded at 500k context), plus the
+single-token recurrence used by decode.  The Pallas kernel twin lives in
+``repro.kernels.ssd_scan``.
+
+Layout conventions (ngroups = 1):
+  x  : (B, S, H, P)   H = d_inner / head_dim SSD heads, P = head_dim
+  dt : (B, S, H)      softplus-positive step sizes
+  A  : (H,)           negative per-head decay rate
+  B_, C_: (B, S, N)   shared across heads (group = 1)
+State: (B, H, P, N).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+from repro.models.param import PDef
+from repro.parallel.sharding import constrain
+
+
+class SSMCache(NamedTuple):
+    """Per-layer-stack SSM cache for decode.
+
+    conv:  (L, B, W-1, conv_channels) — rolling conv window
+    state: (L, B, H, P, N)            — SSD recurrent state
+    """
+    conv: jax.Array
+    state: jax.Array
+
+
+def mamba2_defs(cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    din = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    W = cfg.ssm_conv_width
+    conv_ch = din + 2 * N
+    return {
+        # order: [z | xBC | dt]
+        "in_proj": PDef((D, 2 * din + 2 * N + H), ("embed", "mlp")),
+        "conv_w": PDef((W, conv_ch), ("conv_width", "act_mlp"), "normal", 0.1),
+        "conv_b": PDef((conv_ch,), ("act_mlp",), "zeros"),
+        "dt_bias": PDef((H,), ("ssm_heads",), "zeros"),
+        "a_log": PDef((H,), ("ssm_heads",), "scalar", 0.0),   # A = -exp(a_log)
+        "d_skip": PDef((H,), ("ssm_heads",), "ones"),
+        "norm": PDef((din,), ("norm",), "ones"),
+        "out_proj": PDef((din, D), ("mlp", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable 'segment sum': out[..., i, j] = sum_{j<m<=i} a[..., m].
+
+    a: (..., Q) -> (..., Q, Q) lower-triangular (−inf above diagonal)."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int,
+                initial_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    x:(B,S,H,P) dt:(B,S,H) a:(H,) b,c:(B,S,N)."""
+    Bsz, S, H, P = x.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    dtA = (dt * a).astype(jnp.float32)                    # (B,S,H) negative
+    xdt = x * dt[..., None].astype(x.dtype)
+
+    # chunked views
+    xc = xdt.reshape(Bsz, nc, Q, H, P)
+    bc = b.reshape(Bsz, nc, Q, N)
+    cc = c.reshape(Bsz, nc, Q, N)
+    ac = dtA.reshape(Bsz, nc, Q, H).transpose(0, 3, 1, 2)  # (B,H,nc,Q)
+    a_cum = jnp.cumsum(ac, axis=-1)                        # (B,H,nc,Q)
+
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(ac))                               # (B,H,nc,Q,Q)
+    scores = jnp.einsum("bzln,bzsn->bzls", cc, bc)         # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bhzls,bzls,bzshp->bzlhp",
+                        L, scores.astype(jnp.float32),
+                        xc.astype(jnp.float32))
+
+    # 2) per-chunk input states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)        # (B,H,nc,Q)
+    states = jnp.einsum("bzln,bhzl,bzlhp->bzhpn",
+                        bc.astype(jnp.float32), decay_states,
+                        xc.astype(jnp.float32))            # (B,nc,H,P,N)
+
+    # 3) inter-chunk recurrence (sequential scan keeps memory O(B·H·P·N))
+    chunk_decay = jnp.exp(a_cum[..., -1])                  # (B,H,nc)
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st_in, dec = inp                                   # (B,H,P,N),(B,H)
+        new = carry * dec[..., None, None] + st_in
+        return new, carry                                  # emit PREVIOUS
+
+    (final_state, prev_states) = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 2, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (B,nc,H,P,N)
+
+    # 4) state -> output contribution
+    out_decay = jnp.exp(a_cum)                             # (B,H,nc,Q)
+    y_off = jnp.einsum("bzln,bzhpn,bhzl->bzlhp",
+                       cc.astype(jnp.float32), prev_states, out_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state: jax.Array, x_t: jax.Array, dt_t: jax.Array,
+                    a: jax.Array, b_t: jax.Array, c_t: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD recurrence.
+
+    state:(B,H,P,N) x_t:(B,H,P) dt_t:(B,H) b_t,c_t:(B,N).
+    Returns (y (B,H,P), new_state)."""
+    decay = jnp.exp((dt_t * a).astype(jnp.float32))        # (B,H)
+    xdt = (x_t * dt_t[..., None]).astype(jnp.float32)
+    inject = jnp.einsum("bhp,bn->bhpn", xdt, b_t.astype(jnp.float32))
+    new_state = state * decay[..., None, None] + inject
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array,
+                 prev: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. xbc: (B, S, CH); w: (W, CH).
+
+    prev: (B, W-1, CH) rolling history for decode; returns (out, new_prev)."""
+    B, S, CH = xbc.shape
+    W = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((B, W - 1, CH), xbc.dtype)
+    ext = jnp.concatenate([prev, xbc], axis=1)             # (B, S+W-1, CH)
+    out = jnp.zeros((B, S, CH), jnp.float32)
+    for i in range(W):                                     # W is tiny (4)
+        out = out + ext[:, i:i + S, :].astype(jnp.float32) * w[i]
+    out = out + bias
+    new_prev = ext[:, -(W - 1):, :] if W > 1 else prev
+    return jax.nn.silu(out).astype(xbc.dtype), new_prev
+
+
+def mamba2_block(p: Dict, x: jax.Array, cfg: ModelConfig,
+                 cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                 return_cache: bool = False,
+                 ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Full Mamba2 mixer. x: (B, S, D).
+
+    cache = (conv_prev (B,W-1,CH), ssm_state (B,H,P,N)).  Decode passes a
+    cache with S == 1; prefill passes cache=None, return_cache=True to get
+    the post-prefill cache; training passes neither."""
+    B, S, D = x.shape
+    din, H, N, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = jnp.split(zxbcdt, [din, 2 * din + 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                     # (H,)
+
+    conv_prev = cache[0] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_prev)
+    xin, b_, c_ = jnp.split(xbc, [din, din + N], axis=-1)
+    xin = xin.reshape(B, S, H, P)
+    xin = constrain(xin, "batch", None, "ssm_heads", None)
+
+    if cache is not None and S == 1:
+        y, new_state = ssd_decode_step(
+            cache[1], xin[:, 0], dt[:, 0], a, b_[:, 0], c_[:, 0])
+        y = y[:, None]                                     # (B,1,H,P)
+    else:
+        init = cache[1] if cache is not None else None
+        y, new_state = ssd_chunked(xin, dt, a, b_, c_, cfg.ssm_chunk, init)
+
+    y = y + xin * p["d_skip"].astype(x.dtype)[:, None]
+    y = y.reshape(B, S, din)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y, p["norm"], cfg.rms_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+    out = constrain(out, "batch", None, "act_embed")
+    new_cache = ((new_conv, new_state)
+                 if (cache is not None or return_cache) else None)
+    return out, new_cache

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               abstract_opt_state, opt_logical_axes)
+from repro.optim.schedule import lr_schedule
+from repro.optim.compression import (compress_grads, decompress_grads,
+                                     init_error_feedback)

@@ -1,0 +1,85 @@
+"""AdamW with global-norm clipping.
+
+Functional, pytree-generic.  Optimizer moments inherit the parameters'
+logical sharding axes, so with FSDP rules (weights over ``data``) the
+states are ZeRO-sharded automatically; ``opt_logical_axes`` exposes the
+metadata for the launcher's in/out_shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import OptimizerConfig
+from repro.optim.schedule import lr_schedule
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # () int32
+    m: Any                   # like params
+    v: Any                   # like params
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def abstract_opt_state(abstract_params) -> AdamWState:
+    z = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+        abstract_params)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), m=z, v=z)
+
+
+def opt_logical_axes(param_axes) -> AdamWState:
+    from repro.parallel.sharding import LogicalAxes
+    return AdamWState(step=LogicalAxes(()), m=param_axes, v=param_axes)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: OptimizerConfig
+                 ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    lr = lr_schedule(step, cfg)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip > 0 else jnp.ones(())
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.beta1 ** t
+    bc2 = 1.0 - cfg.beta2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v_new = cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    stats = {"grad_norm": gnorm, "lr": lr,
+             "clip_scale": jnp.asarray(scale, jnp.float32)}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), stats

@@ -1,0 +1,16 @@
+"""Learning-rate schedules: linear warmup + cosine decay to min_lr_ratio."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.config import OptimizerConfig
+
+
+def lr_schedule(step, cfg: OptimizerConfig):
+    t = step.astype(jnp.float32)
+    warm = cfg.lr * t / jnp.maximum(1.0, cfg.warmup_steps)
+    decay_steps = jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps)
+    frac = jnp.clip((t - cfg.warmup_steps) / decay_steps, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(t < cfg.warmup_steps, warm, cfg.lr * cos)

@@ -1,0 +1,142 @@
+"""Continuous-batching serving driver.
+
+Production serving shape (vLLM-style, TPU-idiomatic static shapes): a
+fixed pool of B cache slots; requests join by prefilling into a free
+slot (slot-wise cache insertion), every decode step advances ALL active
+slots at once, finished sequences (EOS or max-new) free their slot for
+the next queued request.  Static shapes throughout — the jit signature
+never changes.
+
+The per-slot cache trick: prefill runs at batch=1 and its cache is
+scattered into slot ``i`` of the pooled cache along the batch axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new: int = 16
+    eos: int = 1
+    generated: Optional[List[int]] = None
+
+
+class ContinuousBatcher:
+    def __init__(self, model, params, *, slots: int = 4,
+                 prefill_len: int = 64, cache_len: int = 256):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.prefill_len = prefill_len
+        self.cache_len = cache_len
+        self.cfg = model.cfg
+        self._prefill = jax.jit(make_prefill_step(model))
+        self._decode = jax.jit(make_decode_step(model))
+        self.cache = model.init_cache(slots, cache_len)
+        # per-slot state (host side)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.slot_len = np.zeros(slots, np.int64)
+        self.queue: List[Request] = []
+        self.done: Dict[int, List[int]] = {}
+        self.last_tok = jnp.zeros((slots,), jnp.int32)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.generated = []
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def _join(self, slot: int, req: Request):
+        """Prefill the request at batch=1 and scatter into the pool."""
+        S = min(len(req.prompt), self.prefill_len)
+        toks = jnp.asarray(req.prompt[:S], jnp.int32)[None]
+        batch = {"tokens": toks}
+        if self.cfg.m_rope_sections is not None:
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (1, S))
+            batch["positions"] = jnp.broadcast_to(pos, (3, 1, S))
+        tok, cache1 = self.model.prefill(self.params, batch)
+        tok = jnp.argmax(tok, -1).astype(jnp.int32) \
+            if tok.ndim > 1 else tok
+        # scatter each cache leaf's batch row into the pooled cache
+        def scatter(pool, one):
+            if pool.ndim == 0 or one is None:
+                return pool
+            # leaves are (L, B, T, ...) or (L, B, ...); batch axis = 1
+            if pool.ndim >= 2 and pool.shape[1] == self.slots:
+                row = one[:, 0]
+                if pool.ndim >= 3 and one.shape[2] != pool.shape[2]:
+                    # prefill cache is length S; pad/copy into pool length
+                    pad = pool.shape[2] - one.shape[2]
+                    row = jnp.pad(one[:, 0], [(0, 0), (0, pad)]
+                                  + [(0, 0)] * (one.ndim - 3),
+                                  constant_values=(-1 if one.dtype ==
+                                                   jnp.int32 else 0))
+                return pool.at[:, slot].set(row.astype(pool.dtype))
+            return pool
+        new_cache = {}
+        for k in self.cache:
+            if k == "len":
+                new_cache[k] = self.cache[k]
+                continue
+            new_cache[k] = scatter(self.cache[k], cache1.get(k))
+        self.cache = new_cache
+        self.active[slot] = req
+        self.slot_len[slot] = S
+        self.last_tok = self.last_tok.at[slot].set(
+            tok[0] if tok.ndim else tok)
+        req.generated.append(int(self.last_tok[slot]))
+
+    def _evict(self, slot: int):
+        req = self.active[slot]
+        self.done[req.rid] = req.generated
+        self.active[slot] = None
+        self.slot_len[slot] = 0
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One scheduler tick: join waiting requests, one decode step."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            self._join(slot, self.queue.pop(0))
+        if all(r is None for r in self.active):
+            return False
+        # pooled cache len: slots advance together; per-slot validity is
+        # tracked host-side (a production impl uses per-slot lengths via
+        # the pos arrays, which mask invalid history automatically)
+        self.cache["len"] = jnp.asarray(int(self.slot_len.max()), jnp.int32)
+        db = {"tokens": self.last_tok[:, None]}
+        if self.cfg.m_rope_sections is not None:
+            db["positions"] = jnp.broadcast_to(
+                self.cache["len"], (3, self.slots, 1)).astype(jnp.int32)
+        tok, self.cache = self._decode(self.params, self.cache, db)
+        self.last_tok = tok
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            t = int(tok[slot])
+            req.generated.append(t)
+            self.slot_len[slot] += 1
+            if t == req.eos or len(req.generated) >= req.max_new:
+                self._evict(slot)
+        return True
+
+    def run(self, max_ticks: int = 1000) -> Dict[int, List[int]]:
+        ticks = 0
+        while (self.queue or any(r is not None for r in self.active)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.done

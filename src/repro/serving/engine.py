@@ -1,0 +1,33 @@
+"""Serving-step factories.
+
+``prefill_step``  — full-sequence forward that builds the KV/SSM cache and
+                    emits the first generated token.
+``decode_step``   — one token for every sequence in the batch against an
+                    existing cache (the ``decode_32k`` / ``long_500k``
+                    dry-run cells lower exactly this).
+
+Sampling is greedy (argmax) — batched serving driver lives in
+``repro.serving.batcher``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch) -> Tuple[jax.Array, Dict]:
+        logits, cache = model.prefill(params, batch)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, batch) -> Tuple[jax.Array, Dict]:
+        logits, new_cache = model.decode_step(params, batch, cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return decode_step

@@ -1,0 +1,128 @@
+"""LoRA fine-tuning — the paper's second MLPerf workload (Llama-2 70B
+LoRA, §6.6 Table 11) as a first-class framework feature.
+
+Merge-style LoRA: base params stay frozen (stop_gradient); for every
+targeted 2-D+ weight ``W`` we keep ``A (in, r)`` and ``B (r, out)`` and
+forward through ``W + (alpha/r)·A@B``.  Works transparently with the
+scan-over-layers stacked weights ((L, ...) leaves get per-layer adapters)
+and with any model family, because merging happens on the param tree
+before the model apply.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import RunConfig
+from repro.optim import adamw_init, adamw_update
+
+DEFAULT_TARGETS = r"(attn|self_attn|cross_attn)/(wq|wk|wv|wo)|mlp/(w1|w2|w3)"
+
+
+def _walk(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk(v, prefix + (k,))
+    else:
+        yield prefix, tree
+
+
+def _get(tree, path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def _set(tree, path, value):
+    for k in path[:-1]:
+        tree = tree.setdefault(k, {})
+    tree[path[-1]] = value
+
+
+def lora_targets(params, pattern: str = DEFAULT_TARGETS) -> List[Tuple]:
+    rx = re.compile(pattern)
+    out = []
+    for path, leaf in _walk(params):
+        if rx.search("/".join(path)) and getattr(leaf, "ndim", 0) >= 2:
+            out.append(path)
+    return sorted(out)
+
+
+def init_lora(key, params, *, rank: int = 16,
+              pattern: str = DEFAULT_TARGETS, stacked_prefixes=("layers",
+                                                                "enc_layers",
+                                                                "dec_layers")
+              ) -> Dict:
+    """A ~N(0, 1/r), B zeros (standard LoRA init).  Stacked (L, ...) leaves
+    get per-layer adapters with a leading L dim."""
+    lora: Dict = {}
+    for path in lora_targets(params, pattern):
+        w = _get(params, path)
+        stacked = path[0] in stacked_prefixes
+        core = w.shape[1:] if stacked else w.shape
+        d_in = core[0]
+        d_out = int(math.prod(core[1:]))
+        lead = (w.shape[0],) if stacked else ()
+        key, k1 = jax.random.split(key)
+        a = jax.random.normal(k1, lead + (d_in, rank),
+                              jnp.float32) / math.sqrt(rank)
+        b = jnp.zeros(lead + (rank, d_out), jnp.float32)
+        _set(lora, path, {"a": a, "b": b})
+    return lora
+
+
+def merge_lora(params, lora: Dict, *, alpha: float = 16.0, rank: int = 16,
+               freeze_base: bool = True) -> Dict:
+    scale = alpha / rank
+    merged = jax.tree.map(lambda x: x, params)  # shallow-ish copy of dicts
+
+    def _copy(t):
+        return {k: _copy(v) for k, v in t.items()} if isinstance(t, dict) \
+            else t
+    merged = _copy(params)
+    for path, ab in _walk_lora(lora):
+        w = _get(params, path)
+        if freeze_base:
+            w = jax.lax.stop_gradient(w)
+        a, b = ab["a"], ab["b"]
+        stacked = a.ndim == 3
+        if stacked:
+            delta = jnp.einsum("lir,lro->lio", a, b)
+            delta = delta.reshape(w.shape)
+        else:
+            delta = (a @ b).reshape(w.shape)
+        _set(merged, path, (w.astype(jnp.float32)
+                            + scale * delta).astype(w.dtype))
+    return merged
+
+
+def _walk_lora(lora, prefix=()):
+    if isinstance(lora, dict) and set(lora) == {"a", "b"}:
+        yield prefix, lora
+    elif isinstance(lora, dict):
+        for k, v in lora.items():
+            yield from _walk_lora(v, prefix + (k,))
+
+
+def make_lora_train_step(model, run_cfg: RunConfig, *, rank: int = 16,
+                         alpha: float = 16.0):
+    """Train step over (lora, opt) with frozen base params."""
+    opt_cfg = run_cfg.optimizer
+
+    def loss_fn(lora, params, batch):
+        merged = merge_lora(params, lora, alpha=alpha, rank=rank)
+        loss, metrics = model.loss(merged, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(lora, opt, params, batch):
+        (loss, metrics), grads = grad_fn(lora, params, batch)
+        new_lora, new_opt, stats = adamw_update(grads, opt, lora, opt_cfg)
+        return new_lora, new_opt, {"loss": loss, **metrics, **stats}
+
+    return train_step

@@ -1,0 +1,120 @@
+"""Training-step factory.
+
+Builds the jit-able ``train_step(state, batch) -> (state, metrics)`` for a
+(model, RunConfig) pair, with:
+
+  * value_and_grad over the model loss (bf16 compute, fp32 master params),
+  * optional gradient accumulation over microbatches (``parallel.microbatch``)
+    with compressed accumulation + error feedback (``optimizer.grad_compression``),
+  * AdamW with global-norm clipping and warmup+cosine LR,
+  * logical-axis metadata for every state leaf so the launcher can derive
+    NamedShardings without tracing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import RunConfig
+from repro.optim import (AdamWState, adamw_init, adamw_update,
+                         abstract_opt_state, opt_logical_axes)
+from repro.parallel.sharding import LogicalAxes
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Optional[Any] = None        # error-feedback buffers (compression)
+
+
+def init_train_state(model, run_cfg: RunConfig, key) -> TrainState:
+    params = model.init(key, dtype=jnp.dtype(run_cfg.param_dtype))
+    opt = adamw_init(params)
+    ef = None
+    if run_cfg.optimizer.grad_compression == "int8_ef":
+        from repro.optim import init_error_feedback
+        ef = init_error_feedback(params)
+    return TrainState(params=params, opt=opt, ef=ef)
+
+
+def abstract_train_state(model, run_cfg: RunConfig) -> TrainState:
+    params = model.abstract_params(jnp.dtype(run_cfg.param_dtype))
+    opt = abstract_opt_state(params)
+    ef = None
+    if run_cfg.optimizer.grad_compression == "int8_ef":
+        ef = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return TrainState(params=params, opt=opt, ef=ef)
+
+
+def train_state_logical_axes(model, run_cfg: RunConfig) -> TrainState:
+    axes = model.logical_axes()
+    ef = (axes if run_cfg.optimizer.grad_compression == "int8_ef" else None)
+    return TrainState(params=axes, opt=opt_logical_axes(axes), ef=ef)
+
+
+def make_train_state_specs(model, run_cfg: RunConfig, mesh, rules=None):
+    from repro.parallel.sharding import spec_tree_for_params
+    ab = abstract_train_state(model, run_cfg)
+    ax = train_state_logical_axes(model, run_cfg)
+    return ab, spec_tree_for_params(ab, ax, mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+def _microbatches(batch: Dict, n: int) -> Dict:
+    """Reshape (B, ...) -> (n, B//n, ...) for scan-accumulation."""
+    def r(x):
+        if x.ndim >= 2 and x.shape[0] == 3:          # (3, B, S) positions
+            return jnp.moveaxis(
+                x.reshape(3, n, x.shape[1] // n, *x.shape[2:]), 1, 0)
+        return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(model, run_cfg: RunConfig):
+    opt_cfg = run_cfg.optimizer
+    nmicro = run_cfg.parallel.microbatch
+    scheme = opt_cfg.grad_compression
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        if nmicro and nmicro > 1:
+            mb = _microbatches(batch, nmicro)
+
+            def acc_body(carry, mbatch):
+                gacc, lacc = carry
+                (loss, _), grads = grad_fn(state.params, mbatch)
+                if scheme == "bf16":
+                    grads = jax.tree.map(
+                        lambda g: g.astype(jnp.bfloat16), grads)
+                gacc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                    gacc, grads)
+                return (gacc, lacc + loss), None
+
+            acc_dtype = jnp.bfloat16 if scheme == "bf16" else jnp.float32
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), state.params)
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (g0, jnp.zeros(())), mb)
+            grads = jax.tree.map(
+                lambda g: (g / nmicro).astype(jnp.float32), gsum)
+            loss = lsum / nmicro
+            metrics: Dict[str, jax.Array] = {"loss": loss}
+        else:
+            (loss, m), grads = grad_fn(state.params, batch)
+            metrics = {"loss": loss, **m}
+
+        new_params, new_opt, stats = adamw_update(
+            grads, state.opt, state.params, opt_cfg)
+        metrics.update(stats)
+        return TrainState(params=new_params, opt=new_opt, ef=state.ef), \
+            metrics
+
+    return train_step

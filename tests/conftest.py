@@ -1,0 +1,12 @@
+import os
+import sys
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# must see 1 device (the dry-run sets 512 itself; distributed tests spawn
+# subprocesses with their own flags).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks pkg
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

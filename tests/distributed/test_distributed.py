@@ -1,0 +1,163 @@
+"""Multi-device semantics via subprocesses with fake CPU devices.
+
+These spawn children with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+so the main pytest process keeps its single device (per the dry-run spec).
+Each child prints ``OK`` on success.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+
+
+def _run_child(code: str, devices: int = 8, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=ROOT,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0 and "OK" in out.stdout, (
+        out.stdout[-1500:], out.stderr[-3000:])
+    return out.stdout
+
+
+def test_pipeline_matches_unpipelined():
+    _run_child(r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.parallel.pipeline import make_pipelined_loss
+L, D, M, mb = 8, 16, 8, 2
+mesh = jax.make_mesh((4,), ("pipe",))
+ws = jnp.asarray(np.random.default_rng(0).standard_normal((L, D, D)) * 0.3,
+                 jnp.float32)
+def stage_fn(p, x):
+    h, _ = jax.lax.scan(lambda h, w: (jnp.tanh(h @ w), None), x, p)
+    return h
+def loss_fn(h, _):
+    return jnp.mean(h ** 2)
+x = jnp.asarray(np.random.default_rng(1).standard_normal((M, mb, D)),
+                jnp.float32)
+for vp in (1, 2):
+    ploss = make_pipelined_loss(mesh, stage_fn, loss_fn, num_micro=M, vp=vp)
+    got = ploss(ws, x, jnp.zeros(()))
+    ref = loss_fn(stage_fn(ws, x.reshape(M * mb, D)).reshape(M, mb, D), None)
+    assert jnp.allclose(got, ref, atol=1e-6), (vp, got, ref)
+    g1 = jax.grad(lambda w: ploss(w, x, jnp.zeros(())))(ws)
+    g2 = jax.grad(lambda w: loss_fn(
+        stage_fn(w, x.reshape(M * mb, D)).reshape(M, mb, D), None))(ws)
+    assert jnp.abs(g1 - g2).max() < 1e-6
+print("OK")
+""")
+
+
+def test_hierarchical_collectives_match_flat():
+    _run_child(r"""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core.collectives import hierarchical_psum, ring_all_reduce
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+sm = lambda fn: jax.shard_map(fn, mesh=mesh, in_specs=P(("pod", "data")),
+                              out_specs=P(("pod", "data")), check_vma=False)
+flat = sm(lambda v: jax.lax.psum(jax.lax.psum(v, "data"), "pod"))(x)
+hier = sm(lambda v: hierarchical_psum(v, intra_axis="data",
+                                      inter_axis="pod"))(x)
+assert jnp.allclose(flat, hier)
+m2 = jax.make_mesh((8,), ("d",))
+sm2 = lambda fn: jax.shard_map(fn, mesh=m2, in_specs=P("d"),
+                               out_specs=P("d"), check_vma=False)
+y = jnp.arange(128, dtype=jnp.float32).reshape(16, 8)
+r = sm2(lambda v: ring_all_reduce(v, "d"))(y)
+p = sm2(lambda v: jax.lax.psum(v, "d"))(y)
+assert jnp.abs(r - p).max() < 1e-4
+print("OK")
+""")
+
+
+def test_tp_sharded_loss_matches_single_device():
+    """The TP/FSDP-sharded model loss equals the unsharded loss."""
+    _run_child(r"""
+import jax, jax.numpy as jnp
+from repro.configs import reduced_config
+from repro.core.config import ShapeConfig, StepKind
+from repro.models.model import build_model, make_concrete_batch
+from repro.parallel import sharding as shd
+from repro.parallel.sharding import spec_tree_for_params
+
+cfg = reduced_config("qwen3-32b")
+model = build_model(cfg, remat="none")
+params = model.init(jax.random.key(0))
+batch = make_concrete_batch(cfg, ShapeConfig("t", 64, 4, StepKind.TRAIN))
+ref = float(model.loss(params, batch)[0])
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+with shd.use_sharding(mesh):
+    sh = spec_tree_for_params(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                     params), model.logical_axes(), mesh)
+    params_s = jax.tree.map(jax.device_put, params, sh)
+    with mesh:
+        got = float(jax.jit(lambda p, b: model.loss(p, b)[0])(params_s,
+                                                              batch))
+assert abs(got - ref) < 2e-2, (got, ref)
+print("OK")
+""")
+
+
+def test_elastic_shrink_and_restore():
+    """Lose 'nodes', rebuild a smaller mesh, restore the checkpoint onto
+    it, keep training — the §8.7 fault-containment path."""
+    _run_child(r"""
+import tempfile
+import jax, jax.numpy as jnp
+from repro.checkpoint import CheckpointManager
+from repro.configs import reduced_config
+from repro.core.config import RunConfig, ShapeConfig, StepKind
+from repro.launch.elastic import make_elastic_mesh, reshard_restore, \
+    shrink_data_axis
+from repro.models.model import build_model, make_concrete_batch
+from repro.parallel import sharding as shd
+from repro.train.step import (abstract_train_state, init_train_state,
+                              make_train_step, train_state_logical_axes)
+
+cfg = reduced_config("gemma-2b")
+shape = ShapeConfig("t", 32, 4, StepKind.TRAIN)
+run_cfg = RunConfig(model=cfg, shape=shape)
+model = build_model(cfg, remat="none")
+state = init_train_state(model, run_cfg, jax.random.key(0))
+step = make_train_step(model, run_cfg)
+batch = make_concrete_batch(cfg, shape)
+
+mgr = CheckpointManager(tempfile.mkdtemp())
+mgr.save(1, state)
+
+# full mesh: 8 devices (4 data x 2 model); "failure" leaves 6 => 3x2
+assert shrink_data_axis(8, 2) == ((4, 2), ("data", "model"))
+assert shrink_data_axis(6, 2) == ((3, 2), ("data", "model"))
+mesh = make_elastic_mesh(2, devices=jax.devices()[:6])
+assert dict(mesh.shape) == {"data": 3, "model": 2}
+
+abstract = abstract_train_state(model, run_cfg)
+axes = train_state_logical_axes(model, run_cfg)
+with shd.use_sharding(mesh):
+    restored, extra, s = reshard_restore(mgr, abstract, axes, mesh)
+    with mesh:
+        new_state, metrics = jax.jit(step)(restored, batch)
+assert s == 1 and float(metrics["loss"]) > 0
+print("OK")
+""")
+
+
+def test_dryrun_single_cell_multipod():
+    """The mandated multi-pod dry-run path (512 devices) for one cell."""
+    _run_child(r"""
+import sys
+from repro.launch.dryrun import run_cell
+rep = run_cell("gemma-2b", "decode_32k", multi_pod=True, verbose=False)
+assert rep.chips == 512
+assert rep.hlo_flops > 0 and rep.memory_s > 0
+print("OK")
+""", devices=512, timeout=900)

@@ -1,0 +1,119 @@
+"""Checkpointing: roundtrip, atomicity, retention, async completion
+events, and the fault-tolerance property — kill/restart == uninterrupted
+training (deliverable: checkpoint/restart correctness)."""
+import json
+import pathlib
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import reduced_config
+from repro.core.config import (OptimizerConfig, RunConfig, ShapeConfig,
+                               StepKind)
+from repro.data import PackedPipeline
+from repro.models.model import build_model
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+
+def _tiny_setup(tmp_path, steps_cfg=10):
+    cfg = reduced_config("gemma-2b")
+    shape = ShapeConfig("t", 32, 2, StepKind.TRAIN)
+    run_cfg = RunConfig(model=cfg, shape=shape,
+                        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2,
+                                                  total_steps=steps_cfg))
+    model = build_model(cfg, remat="none")
+    state = init_train_state(model, run_cfg, jax.random.key(0))
+    step = jax.jit(make_train_step(model, run_cfg))
+    pipe = PackedPipeline(cfg, shape, seed=0)
+    return cfg, shape, model, state, step, pipe
+
+
+def test_roundtrip(tmp_path):
+    _, _, _, state, _, _ = _tiny_setup(tmp_path)
+    mgr = CheckpointManager(tmp_path / "ck")
+    mgr.save(5, state, extra={"k": 1})
+    got, extra, step = mgr.restore(state)
+    assert step == 5 and extra == {"k": 1}
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomicity_tmp_ignored(tmp_path):
+    _, _, _, state, _, _ = _tiny_setup(tmp_path)
+    mgr = CheckpointManager(tmp_path / "ck")
+    mgr.save(1, state)
+    # simulate a crash mid-write: stray .tmp directory
+    crash = (tmp_path / "ck" / "step_00000002.tmp")
+    crash.mkdir()
+    (crash / "garbage.npy").write_bytes(b"xx")
+    assert mgr.latest_step() == 1
+    got, _, step = mgr.restore(state)
+    assert step == 1
+
+
+def test_retention(tmp_path):
+    _, _, _, state, _, _ = _tiny_setup(tmp_path)
+    mgr = CheckpointManager(tmp_path / "ck", keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_async_completion_event(tmp_path):
+    _, _, _, state, _, _ = _tiny_setup(tmp_path)
+    mgr = CheckpointManager(tmp_path / "ck")
+    seen = []
+    mgr.add_completion_observer(seen.append)
+    mgr.save(7, state, blocking=False)
+    mgr.wait()
+    assert seen == [7]
+    assert mgr.latest_step() == 7
+
+
+def test_kill_restart_equals_uninterrupted(tmp_path):
+    """THE fault-tolerance property: train 6 steps straight == train 3,
+    checkpoint, 'crash', restore (state + data cursor), train 3 more."""
+    cfg, shape, model, state0, step, pipe = _tiny_setup(tmp_path)
+
+    # uninterrupted
+    state = state0
+    pipe_a = PackedPipeline(cfg, shape, seed=0)
+    for _ in range(6):
+        batch = {k: jnp.asarray(v) for k, v in pipe_a.next_batch().items()}
+        state, _ = step(state, batch)
+    want = state
+
+    # interrupted at step 3
+    mgr = CheckpointManager(tmp_path / "ck2")
+    state = state0
+    pipe_b = PackedPipeline(cfg, shape, seed=0)
+    for _ in range(3):
+        batch = {k: jnp.asarray(v) for k, v in pipe_b.next_batch().items()}
+        state, _ = step(state, batch)
+    mgr.save(3, state, extra={"pipeline": pipe_b.state()})
+    del state, pipe_b                      # "crash"
+
+    restored, extra, s = mgr.restore(want)  # structure donor only
+    pipe_c = PackedPipeline(cfg, shape, seed=0)
+    pipe_c.restore(extra["pipeline"])
+    state = restored
+    for _ in range(3):
+        batch = {k: jnp.asarray(v) for k, v in pipe_c.next_batch().items()}
+        state, _ = step(state, batch)
+
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(state)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    _, _, _, state, _, _ = _tiny_setup(tmp_path)
+    mgr = CheckpointManager(tmp_path / "ck3")
+    mgr.save(1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        mgr.restore({"w": jnp.zeros((8, 4))})

@@ -1,0 +1,125 @@
+"""Cluster simulator: paper-calibration assertions + invariant property
+tests (deliverable c: hypothesis on system invariants)."""
+import math
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.cluster_sim import (JobState, Simulation, obs1_job_states,
+                                    obs2_job_sizes, obs3_utilization,
+                                    obs4_runtime_cdf, obs5_daily_submissions,
+                                    obs6_faults, short_job_wait_stats)
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return Simulation(seed=0).run()
+
+
+def test_obs1_cancellations_dominate_gpu_time(sim):
+    o = obs1_job_states(sim)
+    # paper: 73.5% cancelled, 0.3% failed GPU-time; 16.9% failed count
+    assert abs(o["gpu_time_share"].get("CANCELLED", 0) - 0.735) < 0.09
+    assert o["gpu_time_share"].get("FAILED", 0) < 0.02
+    assert abs(o["count_share"].get("FAILED", 0) - 0.169) < 0.06
+
+
+def test_obs2_size_skew(sim):
+    o = obs2_job_sizes(sim)
+    assert abs(o["single_node_count_share"] - 0.769) < 0.07
+    assert abs(o["le4_count_share"] - 0.864) < 0.07
+    assert abs(o["ge17_gpu_time_share"] - 0.733) < 0.10
+    assert o["single_node_time_share"] < 0.06
+
+
+def test_obs3_utilization_by_scale(sim):
+    o = obs3_utilization(sim)
+    assert o["median_util"]["17-32"] > 95.0
+    assert o["median_util"]["1"] < 35.0
+    assert o["median_low_util_frac"]["1"] > 0.5
+    assert o["median_low_util_frac"]["17-32"] < 0.05
+
+
+def test_obs4_long_tail(sim):
+    o = obs4_runtime_cdf(sim)
+    cpt = o["17-32"]
+    assert abs(cpt["frac_gt_week"] - 0.136) < 0.09
+    assert o["1"]["median_h"] < 1.0          # most dev jobs finish quickly
+
+
+def test_obs5_phase_shift(sim):
+    o = obs5_daily_submissions(sim)
+    # fine-tuning ramps after CPT: its center of mass is later
+    assert o["ft_center_day"] > o["cpt_center_day"] + 10
+
+
+def test_obs6_fault_taxonomy(sim):
+    o = obs6_faults(sim)
+    assert 12 <= o["total"] <= 32            # Poisson around 21
+    assert o["by_component"].get("gpu", 0) >= \
+        o["by_component"].get("storage_switch", 0)
+    m = o["by_month"]
+    assert m.get("Jan", 0) >= m.get("Mar", 0)   # burn-in decay
+
+
+# -- invariants --------------------------------------------------------------
+def test_invariant_segments_closed(sim):
+    for j in sim.jobs.values():
+        for s, e, n in j.segments:
+            assert not math.isnan(e), j
+            assert e >= s >= 0
+            assert n == j.nodes
+
+
+def test_invariant_no_double_allocation():
+    """Replay: at any event boundary each node hosts at most one job."""
+    sim = Simulation(seed=1, rate_scale=1.5).run()
+    events = []
+    for j in sim.jobs.values():
+        for s, e, n in j.segments:
+            events.append((s, +1, j.id, j.nodes))
+            events.append((e, -1, j.id, j.nodes))
+    events.sort(key=lambda t: (t[0], t[1]))
+    active_nodes = 0
+    for t, d, jid, n in events:
+        active_nodes += d * n
+        assert active_nodes <= 104 + 1e-9, (t, active_nodes)   # nodes+spares
+
+
+def test_invariant_states_terminal(sim):
+    for j in sim.jobs.values():
+        assert j.state in (JobState.COMPLETED, JobState.CANCELLED,
+                           JobState.FAILED), j.state
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 50))
+def test_property_gpu_time_conservation(seed):
+    """Total GPU-hours across jobs <= cluster capacity × horizon."""
+    sim = Simulation(seed=seed, days=30).run()
+    total = sum(j.gpu_hours for j in sim.jobs.values())
+    assert total <= 104 * 8 * 30 * 24 + 1e-6
+    assert total >= 0
+
+
+def test_preemption_reduces_short_wait_and_preserves_cpt():
+    base = Simulation(seed=0, preemption=False, rate_scale=2.0).run()
+    pre = Simulation(seed=0, preemption=True, rate_scale=2.0).run()
+    wb, wp = short_job_wait_stats(base), short_job_wait_stats(pre)
+    assert wp["p90_wait_h"] < wb["p90_wait_h"] * 0.6
+    cpt_b = sum(j.gpu_hours for j in base.jobs.values()
+                if j.cls.value == "cpt")
+    cpt_p = sum(j.gpu_hours for j in pre.jobs.values()
+                if j.cls.value == "cpt")
+    assert cpt_p > 0.9 * cpt_b
+
+
+def test_straggler_mitigation_reduces_lost_hours():
+    off = Simulation(seed=0, rate_scale=1.5).run()
+    on = Simulation(seed=0, rate_scale=1.5, straggler_mitigation=True).run()
+    lost = lambda s: sum(r["lost_node_hours"] for s_ in [s]
+                         for r in s_.stragglers)
+    assert len(off.stragglers) > 5
+    assert lost(on) < 0.8 * lost(off)

@@ -1,0 +1,61 @@
+"""Config registry: published sizes, vocab padding, shape applicability."""
+import pytest
+
+from repro.configs import ASSIGNED, all_configs, get_config, list_archs, \
+    reduced_config
+from repro.core.config import SHAPES, StepKind, shape_applicable
+
+# published parameter counts (±8% — analytic formula vs exact arch details)
+PUBLISHED_B = {
+    "qwen3-32b": 32.8, "gemma3-4b": 4.0, "gemma-2b": 2.5, "gemma-7b": 8.5,
+    "dbrx-132b": 132.0, "mixtral-8x22b": 141.0, "seamless-m4t-medium": 1.2,
+    "mamba2-1.3b": 1.3, "qwen2-vl-7b": 7.6, "zamba2-7b": 7.0,
+    "gpt3-175b": 175.0, "llama2-70b": 70.0,
+}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_counts_match_published(arch):
+    cfg = get_config(arch)
+    got = cfg.param_count() / 1e9
+    want = PUBLISHED_B[arch]
+    assert abs(got - want) / want < 0.30, (arch, got, want)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_vocab_padding_divisible(arch):
+    cfg = get_config(arch)
+    assert cfg.padded_vocab % cfg.pad_vocab_to_multiple == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+    assert cfg.padded_vocab % 16 == 0     # model-axis shardable
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_reduced_config_same_family(arch):
+    full, red = get_config(arch), reduced_config(arch)
+    assert full.family == red.family
+    assert red.num_layers <= 8
+    assert red.d_model <= 128
+
+
+def test_moe_active_params_less_than_total():
+    for arch in ("dbrx-132b", "mixtral-8x22b"):
+        cfg = get_config(arch)
+        assert cfg.param_count(active_only=True) < 0.5 * cfg.param_count()
+
+
+def test_long_context_applicability():
+    runnable = {a for a in list_archs(assigned_only=True)
+                if shape_applicable(get_config(a), SHAPES["long_500k"])[0]}
+    assert runnable == {"mamba2-1.3b", "zamba2-7b", "mixtral-8x22b",
+                        "gemma3-4b"}, runnable
+
+
+def test_40_cells_defined():
+    cells = [(a, s) for a in ASSIGNED for s in SHAPES]
+    assert len(cells) == 40
+
+
+def test_flops_per_token_scale():
+    cfg = get_config("qwen3-32b")
+    assert 5.9 * 32.7e9 < cfg.flops_per_token() < 6.1 * 33.0e9

@@ -1,0 +1,100 @@
+"""Logical-axis sharding rules: fallbacks, exclusivity, and hypothesis
+property tests over random tensor shapes (deliverable c: property tests on
+system invariants)."""
+import hypothesis.strategies as st
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import DEFAULT_RULES, logical_to_spec
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+class FakeMesh:
+    """Mesh stand-in exposing .shape (enough for logical_to_spec)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_batch_shards_over_pod_and_data():
+    spec = logical_to_spec(("batch", None, None), (256, 4096, 5120), MESH2)
+    assert spec[0] == ("pod", "data")
+
+
+def test_batch_fallback_when_indivisible():
+    # global_batch=1 (long_500k): batch replicates, cache_seq picks data
+    spec = logical_to_spec(("cache_batch", "cache_seq", "cache_kv", None),
+                           (1, 524288, 8, 128), MESH1)
+    assert spec == P(None, "data")      # kv=8 %16 -> replicated, trailing cut
+
+
+def test_kv_heads_replicate_when_indivisible():
+    spec = logical_to_spec(("qkv_embed", "kv_heads", "head_dim"),
+                           (5120, 8, 128), MESH1)
+    assert spec == P("data")
+
+
+def test_experts_shard_16way_dbrx():
+    spec = logical_to_spec(("experts", "embed", "mlp"), (16, 6144, 10752),
+                           MESH1)
+    assert spec == P("model", "data")
+
+
+def test_experts_fallback_mixtral():
+    spec = logical_to_spec(("experts", "embed", "mlp"), (8, 6144, 16384),
+                           MESH1)
+    assert spec == P(None, "data", "model")
+
+
+def test_axis_exclusivity():
+    # embed wants data, but batch already took pod+data -> embed falls
+    # through to its second candidate (model); axes stay unique
+    spec = logical_to_spec(("batch", "embed"), (512, 4096), MESH2)
+    assert spec == P(("pod", "data"), "model")
+
+
+_LOGICAL = st.sampled_from(list(DEFAULT_RULES) + [None])
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(_LOGICAL, st.integers(1, 8)), min_size=1,
+                max_size=5))
+def test_spec_always_valid(dims):
+    """Property: any (logical, shape) combination yields a spec whose axes
+    are unique and whose sharded dims are divisible."""
+    logical = tuple(l for l, _ in dims)
+    shape = tuple(2 ** e for _, e in dims)
+    for mesh in (MESH1, MESH2):
+        spec = logical_to_spec(logical, shape, mesh)
+        used = []
+        for i, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes:
+                assert a in mesh.shape
+                used.append(a)
+                n *= mesh.shape[a]
+            assert shape[i] % n == 0, (logical, shape, spec)
+        assert len(used) == len(set(used)), (logical, shape, spec)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10))
+def test_spec_deterministic(seed):
+    rng = np.random.default_rng(seed)
+    names = list(DEFAULT_RULES)
+    logical = tuple(rng.choice(names) for _ in range(3))
+    shape = tuple(int(2 ** rng.integers(0, 10)) for _ in range(3))
+    s1 = logical_to_spec(logical, shape, MESH2)
+    s2 = logical_to_spec(logical, shape, MESH2)
+    assert s1 == s2
