@@ -2,8 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (see benchmarks.common.emit).
 
-    PYTHONPATH=src python -m benchmarks.run            # all
-    PYTHONPATH=src python -m benchmarks.run hpl hpcg   # subset
+    PYTHONPATH=src python -m benchmarks.run                       # all
+    PYTHONPATH=src python -m benchmarks.run hpl hpcg              # subset
+    PYTHONPATH=src python -m benchmarks.run --only workload,scheduler
 """
 from __future__ import annotations
 
@@ -25,9 +26,30 @@ SUITES = [
 ]
 
 
+def parse_wanted(argv):
+    """Suite names from positional args and/or ``--only a,b`` flags."""
+    wanted = set()
+    it = iter(argv)
+    for arg in it:
+        if arg == "--only":
+            arg = next(it, None)
+            if arg is None:
+                raise SystemExit("--only requires a suite list, e.g. "
+                                 "--only workload,scheduler")
+        if arg.startswith("--only="):
+            arg = arg.split("=", 1)[1]
+        wanted.update(n for n in arg.split(",") if n)
+    known = {name for name, _ in SUITES}
+    unknown = wanted - known
+    if unknown:
+        raise SystemExit(f"unknown suites {sorted(unknown)}; "
+                         f"choose from {sorted(known)}")
+    return wanted or None
+
+
 def main(argv=None) -> int:
     argv = argv if argv is not None else sys.argv[1:]
-    wanted = set(argv) if argv else None
+    wanted = parse_wanted(argv)
     print("name,us_per_call,derived")
     failures = []
     for name, mod_name in SUITES:

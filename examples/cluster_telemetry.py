@@ -1,9 +1,10 @@
-"""Reproduce the paper's §7 observations from the cluster simulator and
-print them side by side with the published numbers (Figures 3–7,
-Tables 13–14).
+"""Reproduce the paper's §7 observations from the cluster simulator
+(the ``repro.sched`` subsystem) and print them side by side with the
+published numbers (Figures 3–7, Tables 13–14).
 
     PYTHONPATH=src python examples/cluster_telemetry.py [--seed 0]
     PYTHONPATH=src python examples/cluster_telemetry.py --preemption
+    PYTHONPATH=src python examples/cluster_telemetry.py --policy topo
 """
 import argparse
 import sys
@@ -22,12 +23,21 @@ def bar(frac, width=40):
 
 
 def main():
+    from repro.sched import POLICIES, cross_pod_stats
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--preemption", action="store_true")
+    ap.add_argument("--preemption", action="store_true",
+                    help="legacy alias for --policy preempt")
+    ap.add_argument("--policy", choices=sorted(POLICIES), default=None,
+                    help="scheduler policy (default fifo)")
     args = ap.parse_args()
+    if args.preemption and args.policy not in (None, "preempt"):
+        ap.error("--preemption conflicts with --policy "
+                 f"{args.policy} (it is an alias for --policy preempt)")
 
-    sim = Simulation(seed=args.seed, preemption=args.preemption).run()
+    sim = Simulation(seed=args.seed, policy=args.policy,
+                     preemption=args.preemption).run()
     o1, o2 = obs1_job_states(sim), obs2_job_sizes(sim)
     o3, o4 = obs3_utilization(sim), obs4_runtime_cdf(sim)
     o5, o6, o7 = (obs5_daily_submissions(sim), obs6_faults(sim),
@@ -57,8 +67,13 @@ def main():
     print(f"\nObs 7 — Table 14: jobA peak {o7['job_a']['nic_peak_gbs']} GB/s "
           f"(paper 22.6), jobB rails {o7['job_b']['rails_gbs']}")
     w = short_job_wait_stats(sim)
-    print(f"\nShort-job waits (preemption={args.preemption}): "
+    cp = cross_pod_stats(sim)
+    print(f"\nShort-job waits (policy={sim.sched.policy.name}): "
           f"median {w['median_wait_h']:.2f}h p90 {w['p90_wait_h']:.2f}h")
+    print(f"Cross-pod collective traffic: {cp['cross_pod_gb']:.0f} GB "
+          f"({cp['cross_pod_frac']*100:.1f}% of {cp['collective_gb']:.0f} GB; "
+          f"{cp['cross_pod_jobs']}/{cp['multi_node_jobs']} multi-node jobs "
+          f"span pods)")
 
 
 if __name__ == "__main__":

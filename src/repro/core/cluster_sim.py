@@ -1,755 +1,32 @@
-"""Discrete-event simulator of the SAKURAONE single-tenant LLM project
-(paper §7 Observations 1–7, §8.5 scheduling implications).
+"""Backward-compatibility shim — the cluster simulator now lives in
+:mod:`repro.sched` (events / cluster / policy / workload / faults /
+simulation / analysis).  Existing imports such as::
 
-Components:
+    from repro.core.cluster_sim import Simulation, obs1_job_states
 
-  * :class:`Cluster` — 100 nodes × 8 GPUs, hot spares, node health states,
-    the two-pod fabric (repro.core.fabric).
-  * :class:`Scheduler` — Slurm-like FIFO + conservative backfill, node
-    drain on faults, and optional **checkpoint-based preemption** (§8.5):
-    checkpoint-completion events of long jobs are safe interruption points
-    at which pending short jobs may temporarily take the nodes.
-  * :class:`ProjectWorkload` — generator calibrated to the paper's
-    single-tenant medical-LLM project: a dev/eval floor (1–2 nodes,
-    numerous, low-util), a CPT phase (17–32 nodes, long-tailed, loss-curve
-    monitored => user cancellations), and a fine-tuning phase that ramps
-    mid-project (3–16 nodes) — Figure 7's temporal shift.
-  * Fault injection following Table 13's component taxonomy with the
-    January burn-in decay (13/5/3 events per month) and Table's recovery
-    modes (node restart vs vendor replacement with hot-spare swap).
-  * Telemetry producing every artifact of Figures 3–7 + Tables 13–14
-    (see ``analysis`` functions; benchmarks/workload.py renders them).
-
-All randomness is seeded — the calibration tests assert the paper's
-aggregate statistics within tolerance.
+keep working unchanged; new code should import from ``repro.sched``.
 """
-from __future__ import annotations
+from repro.sched import (DAY, FAULT_TAXONOMY, HOUR, POLICIES, SIZE_BINS,
+                         CheckpointPreemptPolicy, Cluster,
+                         EasyBackfillPolicy, EventQueue, FaultEvent,
+                         FifoBackfillPolicy, Job, JobClass, JobState,
+                         MultiProjectWorkload, ProjectWorkload, Scheduler,
+                         SchedulerPolicy, Simulation, TopologyAwarePolicy,
+                         _bin_of, cluster_utilization, cross_pod_stats,
+                         make_policy, obs1_job_states, obs2_job_sizes,
+                         obs3_utilization, obs4_runtime_cdf,
+                         obs5_daily_submissions, obs6_faults,
+                         obs7_interconnect, short_job_wait_stats,
+                         wait_time_stats)
 
-import dataclasses
-import enum
-import heapq
-import math
-from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
-
-import numpy as np
-
-from repro.core.fabric import FABRIC, FabricSpec, PortCounters, pod_of_node
-
-HOUR = 1.0          # simulation time unit: hours
-DAY = 24.0
-
-
-class JobState(str, enum.Enum):
-    PENDING = "PENDING"
-    RUNNING = "RUNNING"
-    COMPLETED = "COMPLETED"
-    CANCELLED = "CANCELLED"
-    FAILED = "FAILED"
-    PREEMPTED = "PREEMPTED"     # transient (resumed later)
-
-
-class JobClass(str, enum.Enum):
-    DEV = "dev"            # 1 node: interactive, eval, preprocessing
-    SMALL = "small"        # 2–4 nodes
-    FT = "ft"              # 3–16 nodes fine-tuning (phase 2)
-    CPT = "cpt"            # 17–32 nodes continued pretraining
-
-
-@dataclass
-class Job:
-    id: int
-    cls: JobClass
-    submit_t: float
-    nodes: int
-    duration: float               # actual run length if uninterrupted
-    walltime: float               # requested max walltime
-    will_cancel: bool             # user cancels at `duration` (vs completes)
-    fails_early: bool             # app-level failure shortly after start
-    gpu_util: float               # average utilization (%)
-    low_util_frac: float          # fraction of time below 20%
-    checkpoint_interval: float = 1.0      # hours (multi-TB hourly, §4.3)
-    preemptible: bool = False
-    # runtime bookkeeping
-    state: JobState = JobState.PENDING
-    start_t: Optional[float] = None
-    end_t: Optional[float] = None
-    assigned: List[int] = field(default_factory=list)
-    remaining: Optional[float] = None
-    segments: List[Tuple[float, float, int]] = field(default_factory=list)
-
-    @property
-    def gpu_hours(self) -> float:
-        return sum((e - s) * n * 8 for s, e, n in self.segments)
-
-    @property
-    def runtime(self) -> float:
-        return sum(e - s for s, e, _ in self.segments)
-
-
-@dataclass
-class FaultEvent:
-    t: float
-    component: str
-    node: Optional[int]
-    recovery: str                 # restart | replace | config | degrade
-    recovery_time: float          # hours until capacity restored
-    killed_jobs: List[int] = field(default_factory=list)
-
-
-# Table 13 taxonomy with recovery modes
-FAULT_TAXONOMY = [
-    ("gpu", 9 / 21, "node"),
-    ("nvlink_pcie", 4 / 21, "node"),
-    ("nic_transceiver", 1 / 21, "node"),
-    ("interconnect_switch", 5 / 21, "switch"),
-    ("storage_switch", 1 / 21, "storage"),
-    ("misconfiguration", 1 / 21, "config"),
+__all__ = [
+    "DAY", "HOUR", "SIZE_BINS", "FAULT_TAXONOMY", "POLICIES",
+    "Cluster", "EventQueue", "FaultEvent", "Job", "JobClass", "JobState",
+    "MultiProjectWorkload", "ProjectWorkload", "Scheduler",
+    "SchedulerPolicy", "FifoBackfillPolicy", "EasyBackfillPolicy",
+    "CheckpointPreemptPolicy", "TopologyAwarePolicy", "Simulation",
+    "make_policy", "obs1_job_states", "obs2_job_sizes", "obs3_utilization",
+    "obs4_runtime_cdf", "obs5_daily_submissions", "obs6_faults",
+    "obs7_interconnect", "short_job_wait_stats", "wait_time_stats",
+    "cluster_utilization", "cross_pod_stats", "_bin_of",
 ]
-
-
-class Scheduler:
-    """FIFO + conservative backfill + optional checkpoint-based preemption."""
-
-    def __init__(self, cluster: "Cluster", preemption: bool = False):
-        self.cluster = cluster
-        self.preemption = preemption
-        self.queue: List[int] = []
-
-    def try_schedule(self, sim: "Simulation"):
-        """Greedy pass over the queue (FIFO head, then backfill)."""
-        progress = True
-        while progress:
-            progress = False
-            free = self.cluster.free_nodes()
-            if not self.queue:
-                return
-            head_id = self.queue[0]
-            head = sim.jobs[head_id]
-            if head.nodes <= len(free):
-                self._start(sim, head, free[:head.nodes])
-                self.queue.pop(0)
-                progress = True
-                continue
-            # conservative backfill: a later job may run now if it fits and
-            # its walltime ends before the head's estimated start
-            head_eta = self._eta_for(sim, head)
-            for jid in self.queue[1:]:
-                j = sim.jobs[jid]
-                if j.nodes <= len(free) and \
-                        sim.now + j.walltime <= head_eta + 1e-9:
-                    self._start(sim, j, free[:j.nodes])
-                    self.queue.remove(jid)
-                    progress = True
-                    break
-            if not progress and self.preemption:
-                # find the first *short* pending job (the head is usually a
-                # large job; shorts behind it are the latency-sensitive ones
-                # §8.5 targets)
-                for jid in self.queue:
-                    j = sim.jobs[jid]
-                    if j.walltime <= sim.preempt_max_walltime:
-                        if self._try_preempt(sim, j):
-                            break
-                # marking a victim is progress only at its checkpoint; never
-                # loop again here
-                progress = False
-
-    def _eta_for(self, sim: "Simulation", job: Job) -> float:
-        """Earliest time enough nodes free up (by scheduled end times)."""
-        ends = sorted(j.start_t + j.remaining for j in sim.jobs.values()
-                      if j.state == JobState.RUNNING)
-        need = job.nodes - len(self.cluster.free_nodes())
-        if need <= 0:
-            return sim.now
-        if need > len(ends):
-            return sim.now + 1e6
-        return ends[need - 1]
-
-    def _try_preempt(self, sim: "Simulation", short: Job) -> bool:
-        """§8.5: short pending jobs may take over a long job's nodes at its
-        next checkpoint-completion event.  Implemented as: mark the
-        preemptible running job; at its next checkpoint event it yields."""
-        if short.walltime > sim.preempt_max_walltime:
-            return False
-        candidates = [j for j in sim.jobs.values()
-                      if j.state == JobState.RUNNING and j.preemptible
-                      and j.nodes >= short.nodes
-                      and j.id not in sim.pending_preemptions]
-        if not candidates:
-            return False
-        victim = min(candidates, key=lambda j: j.nodes)
-        sim.pending_preemptions[victim.id] = short.id
-        return True
-
-    def _start(self, sim: "Simulation", job: Job, nodes: List[int]):
-        job.state = JobState.RUNNING
-        job.start_t = sim.now
-        job.assigned = list(nodes)
-        if job.remaining is None:
-            job.remaining = job.duration
-        self.cluster.allocate(nodes, job.id)
-        job.segments.append((sim.now, math.nan, job.nodes))
-        sim.schedule_job_end(job)
-        if job.preemptible:
-            sim.schedule_checkpoint(job)
-
-
-class Cluster:
-    def __init__(self, spec: FabricSpec = FABRIC, hot_spares: int = 4):
-        self.spec = spec
-        self.total = spec.nodes
-        self.hot_spares = hot_spares
-        self.node_state = ["up"] * (self.total + hot_spares)
-        self.alloc: Dict[int, Optional[int]] = {i: None
-                                                for i in range(self.total
-                                                               + hot_spares)}
-        for i in range(self.total, self.total + hot_spares):
-            self.node_state[i] = "spare"
-
-    def free_nodes(self) -> List[int]:
-        return [i for i in range(self.total + self.hot_spares)
-                if self.node_state[i] == "up" and self.alloc[i] is None]
-
-    def allocate(self, nodes: List[int], jid: int):
-        for n in nodes:
-            assert self.node_state[n] == "up" and self.alloc[n] is None
-            self.alloc[n] = jid
-
-    def release(self, nodes: List[int]):
-        for n in nodes:
-            self.alloc[n] = None
-
-    def drain(self, node: int):
-        self.node_state[node] = "drained"
-
-    def restore(self, node: int):
-        if self.node_state[node] == "drained":
-            self.node_state[node] = "up"
-
-    def activate_spare(self) -> Optional[int]:
-        for i in range(self.total, self.total + self.hot_spares):
-            if self.node_state[i] == "spare":
-                self.node_state[i] = "up"
-                return i
-        return None
-
-
-class ProjectWorkload:
-    """Calibrated single-tenant LLM-project generator (see module doc)."""
-
-    def __init__(self, *, days: float = 105.0, seed: int = 0,
-                 rate_scale: float = 1.0):
-        self.days = days
-        self.rng = np.random.default_rng(seed)
-        self.rate_scale = rate_scale
-
-    # class mix calibrated to Observations 1–5 (targets in tests)
-    def _daily_rates(self, day: float) -> Dict[JobClass, float]:
-        r: Dict[JobClass, float] = {}
-        ramp = min(1.0, 0.4 + 0.6 * day / self.days)
-        r[JobClass.DEV] = 8.9 * ramp
-        r[JobClass.SMALL] = 0.95 * ramp
-        # CPT window: day 30 (mid-Jan) .. day 80 (early Mar)
-        r[JobClass.CPT] = 0.66 if 30 <= day <= 80 else 0.02
-        # fine-tuning ramps from day 60 (mid-Feb)
-        if day >= 60:
-            r[JobClass.FT] = 2.4 * min(1.0, (day - 60) / 15)
-        else:
-            r[JobClass.FT] = 0.25       # early small-scale experiments
-        return {k: v * self.rate_scale for k, v in r.items()}
-
-    def _make_job(self, jid: int, cls: JobClass, t: float) -> Job:
-        rng = self.rng
-        if cls == JobClass.DEV:
-            nodes = 1
-            dur = float(np.clip(rng.lognormal(math.log(0.3), 2.05),
-                                0.02, 240))
-            util = float(np.clip(rng.normal(23.4, 12), 2, 80))
-            low = float(np.clip(rng.normal(0.69, 0.12), 0.2, 0.98))
-            cancel_p, fail_p = 0.10, 0.20
-        elif cls == JobClass.SMALL:
-            nodes = int(rng.integers(2, 5))
-            dur = float(np.clip(rng.lognormal(math.log(2.1), 1.8),
-                                0.05, 240))
-            util = float(np.clip(rng.normal(17.7 if nodes == 2 else 45, 15),
-                                 2, 95))
-            low = float(np.clip(rng.normal(0.76 if nodes == 2 else 0.5,
-                                           0.12), 0.05, 0.98))
-            cancel_p, fail_p = 0.15, 0.18
-        elif cls == JobClass.FT:
-            nodes = int(rng.integers(3, 17))
-            dur = float(np.clip(rng.lognormal(math.log(11.0), 1.3),
-                                0.2, 400))
-            med = 92.2 if nodes <= 8 else 42.0
-            util = float(np.clip(rng.normal(med, 18), 5, 100))
-            low = float(np.clip(rng.normal(0.12 if nodes <= 8 else 0.35,
-                                           0.1), 0.0, 0.9))
-            cancel_p, fail_p = 0.28, 0.12
-        else:  # CPT
-            nodes = int(rng.integers(17, 33))
-            dur = float(np.clip(rng.lognormal(math.log(32.0), 1.55),
-                                1.0, 1200))
-            util = float(np.clip(rng.normal(98.4, 1.5), 90, 100))
-            low = float(np.clip(rng.normal(0.011, 0.01), 0.0, 0.1))
-            cancel_p, fail_p = 0.70, 0.06
-        will_cancel = bool(self.rng.random() < cancel_p)
-        fails_early = bool(self.rng.random() < fail_p)
-        return Job(
-            id=jid, cls=cls, submit_t=t, nodes=nodes, duration=dur,
-            walltime=dur * float(rng.uniform(1.3, 3.0)),
-            will_cancel=will_cancel, fails_early=fails_early,
-            gpu_util=util, low_util_frac=low,
-            preemptible=(cls == JobClass.CPT),
-        )
-
-    def generate(self) -> List[Job]:
-        jobs: List[Job] = []
-        jid = 0
-        for day in range(int(self.days)):
-            rates = self._daily_rates(day)
-            for cls, lam in rates.items():
-                n = self.rng.poisson(lam)
-                for _ in range(n):
-                    t = (day + float(self.rng.random())) * DAY
-                    jobs.append(self._make_job(jid, cls, t))
-                    jid += 1
-        jobs.sort(key=lambda j: j.submit_t)
-        for i, j in enumerate(jobs):
-            j.id = i
-        return jobs
-
-
-class Simulation:
-    def __init__(self, *, days: float = 105.0, seed: int = 0,
-                 preemption: bool = False, rate_scale: float = 1.0,
-                 fault_seed: Optional[int] = None,
-                 straggler_mitigation: bool = False,
-                 straggler_rate_per_day: float = 0.35):
-        self.cluster = Cluster()
-        self.sched = Scheduler(self.cluster, preemption=preemption)
-        self.workload = ProjectWorkload(days=days, seed=seed,
-                                        rate_scale=rate_scale)
-        self.jobs: Dict[int, Job] = {}
-        self.now = 0.0
-        self.days = days
-        self._heap: List[Tuple[float, int, str, tuple]] = []
-        self._seq = 0
-        self.faults: List[FaultEvent] = []
-        self.ports = PortCounters()
-        self.rng = np.random.default_rng(
-            fault_seed if fault_seed is not None else seed + 1)
-        self.pending_preemptions: Dict[int, int] = {}
-        self.preempt_max_walltime = 2.0   # hours: "short" jobs
-        self.wait_times: Dict[JobClass, List[float]] = defaultdict(list)
-        self.straggler_mitigation = straggler_mitigation
-        self.straggler_rate_per_day = straggler_rate_per_day
-        self.stragglers: List[Dict] = []   # telemetry
-        self.straggler_slowdown = 1.6      # synchronous step-time multiplier
-
-    # -- event plumbing ----------------------------------------------------
-    def _push(self, t: float, kind: str, payload: tuple = ()):
-        self._seq += 1
-        heapq.heappush(self._heap, (t, self._seq, kind, payload))
-
-    def schedule_job_end(self, job: Job):
-        if job.fails_early:
-            dt = min(float(np.random.default_rng(job.id).exponential(0.1)),
-                     job.duration)
-            self._push(self.now + dt, "job_fail", (job.id,))
-        else:
-            self._push(self.now + job.remaining, "job_end", (job.id,))
-
-    def schedule_checkpoint(self, job: Job):
-        self._push(self.now + job.checkpoint_interval, "checkpoint",
-                   (job.id, job.start_t))
-
-    # -- fault model (Table 13 + burn-in decay) ----------------------------
-    def _gen_faults(self):
-        # monthly intensity: 13 / 5 / 3 over the Jan–Mar window (days 17+)
-        month_rates = [(17, 47, 13), (47, 75, 5), (75, 106, 3)]
-        for lo, hi, n_events in month_rates:
-            if lo >= self.days:              # short-horizon runs
-                continue
-            n = self.rng.poisson(n_events)
-            for _ in range(n):
-                t = self.rng.uniform(lo, min(hi, self.days)) * DAY
-                comp = self.rng.choice(
-                    [c for c, _, _ in FAULT_TAXONOMY],
-                    p=[p for _, p, _ in FAULT_TAXONOMY])
-                self._push(t, "fault", (str(comp),))
-
-    # -- main loop ----------------------------------------------------------
-    def run(self) -> "Simulation":
-        for job in self.workload.generate():
-            self.jobs[job.id] = job
-            self._push(job.submit_t, "submit", (job.id,))
-        self._gen_faults()
-        self._gen_stragglers()
-        horizon = self.days * DAY
-
-        while self._heap:
-            t, _, kind, payload = heapq.heappop(self._heap)
-            if t > horizon:
-                break
-            self.now = t
-            getattr(self, f"_on_{kind}")(*payload)
-
-        # close out still-running segments at horizon (project ends);
-        # empty the queue first so _finish's try_schedule can't start new
-        # jobs during the closeout sweep
-        self.now = horizon
-        self.sched.queue = []
-        for j in list(self.jobs.values()):
-            if j.state == JobState.RUNNING:
-                self._finish(j, JobState.CANCELLED)   # project ends
-            elif j.state == JobState.PENDING:
-                j.state = JobState.CANCELLED
-                j.end_t = horizon
-        return self
-
-    # -- event handlers ------------------------------------------------------
-    def _on_submit(self, jid: int):
-        self.sched.queue.append(jid)
-        self.sched.try_schedule(self)
-
-    def _close_segment(self, job: Job):
-        if job.segments and math.isnan(job.segments[-1][1]):
-            s, _, n = job.segments[-1]
-            job.segments[-1] = (s, self.now, n)
-
-    def _finish(self, job: Job, state: JobState):
-        self._close_segment(job)
-        job.state = state
-        job.end_t = self.now
-        self.cluster.release(job.assigned)
-        job.assigned = []
-        self._account_traffic(job)
-        self.sched.try_schedule(self)
-
-    def _account_traffic(self, job: Job):
-        """NIC counters for Observation 7 (per-rail byte accounting of the
-        job's collectives over its last minute window)."""
-        if job.nodes < 2 or not job.segments:
-            return
-        # DP all-reduce of a ~70B model's grads each step, bf16
-        bytes_per_gpu = 70e9 * 2 / (job.nodes * 8) * 16
-        nodes = list(range(min(job.nodes, 100)))
-        self.ports.add_collective(nodes, bytes_per_gpu)
-
-    def _on_job_end(self, jid: int):
-        job = self.jobs[jid]
-        if job.state != JobState.RUNNING:
-            return
-        # guard against stale end events after preemption/resume
-        if job.start_t is not None and job.remaining is not None and \
-                self.now + 1e-9 < job.start_t + job.remaining:
-            return
-        job.remaining = 0.0
-        self._finish(job,
-                     JobState.CANCELLED if job.will_cancel
-                     else JobState.COMPLETED)
-
-    def _on_job_fail(self, jid: int):
-        job = self.jobs[jid]
-        if job.state != JobState.RUNNING:
-            return
-        job.remaining = 0.0
-        self._finish(job, JobState.FAILED)
-
-    def _on_checkpoint(self, jid: int, started: float):
-        job = self.jobs.get(jid)
-        if job is None or job.state != JobState.RUNNING or \
-                job.start_t != started:
-            return
-        # checkpoint-completion = safe preemption point (§8.5)
-        if jid in self.pending_preemptions:
-            short_id = self.pending_preemptions.pop(jid)
-            self._preempt(job, short_id)
-            return
-        self.schedule_checkpoint(job)
-
-    def _preempt(self, victim: Job, short_id: int):
-        short = self.jobs.get(short_id)
-        if short is None or short.state != JobState.PENDING:
-            # beneficiary already ran; keep the victim going
-            self.schedule_checkpoint(victim)
-            return
-        elapsed = self.now - victim.start_t
-        victim.remaining = max(victim.remaining - elapsed, 0.0)
-        self._close_segment(victim)
-        freed = list(victim.assigned)
-        self.cluster.release(victim.assigned)
-        victim.assigned = []
-        victim.state = JobState.PENDING
-        victim.start_t = None
-        # start the short job on the freed nodes FIRST (that's the point of
-        # the preemption), then the victim rejoins at the queue head so it
-        # resumes from checkpoint as soon as capacity allows (§8.5)
-        if short.id in self.sched.queue:
-            self.sched.queue.remove(short.id)
-        self.sched._start(self, short, freed[:short.nodes])
-        self.sched.queue.insert(0, victim.id)
-        self.sched.try_schedule(self)
-
-    def _on_fault(self, component: str):
-        taxonomy = {c: scope for c, _, scope in FAULT_TAXONOMY}
-        scope = taxonomy[component]
-        ev = FaultEvent(t=self.now, component=component, node=None,
-                        recovery="restart", recovery_time=0.3)
-        if scope == "node":
-            up = [i for i, s in enumerate(self.cluster.node_state)
-                  if s == "up"]
-            node = int(self.rng.choice(up))
-            ev.node = node
-            jid = self.cluster.alloc[node]
-            if jid is not None:
-                job = self.jobs[jid]
-                ev.killed_jobs.append(jid)
-                job.remaining = max(
-                    (job.remaining or 0) - (self.now - job.start_t), 0.0)
-                # paper §7 Obs 6: infra faults mostly surfaced as *manual
-                # cancellations*, not scheduler FAILED states — FAILED time
-                # stays ~0.3% because app failures die early
-                self._finish(job, JobState.CANCELLED)
-                if job.cls in (JobClass.CPT, JobClass.FT) and \
-                        job.remaining > 0.5:
-                    self._resubmit_from_checkpoint(job)
-            self.cluster.drain(node)
-            if component == "gpu" and self.rng.random() < 0.33 or \
-                    component == "nic_transceiver":
-                # vendor-assisted replacement (days), hot spare covers
-                ev.recovery = "replace"
-                ev.recovery_time = float(self.rng.uniform(48, 300))
-                spare = self.cluster.activate_spare()
-                self._push(self.now + ev.recovery_time, "repair", (node,))
-            else:
-                ev.recovery = "restart"
-                ev.recovery_time = float(self.rng.uniform(0.1, 0.6))
-                self._push(self.now + ev.recovery_time, "repair", (node,))
-        elif scope == "switch":
-            # leaf/spine event: degrade or reboot; reboot may kill jobs in pod
-            if self.rng.random() < 0.4:
-                ev.recovery = "restart"
-                ev.recovery_time = float(self.rng.uniform(0.1, 0.5))
-            else:
-                ev.recovery = "degrade"
-                ev.recovery_time = float(self.rng.uniform(0.2, 2.0))
-        elif scope == "storage":
-            ev.recovery = "restart"
-            ev.recovery_time = float(self.rng.uniform(0.1, 0.5))
-        else:  # config
-            ev.recovery = "config"
-            ev.recovery_time = float(self.rng.uniform(0.2, 1.0))
-        self.faults.append(ev)
-        self.sched.try_schedule(self)
-
-    def _resubmit_from_checkpoint(self, job: Job):
-        """Restart a training job from its last hourly checkpoint."""
-        lost = min(job.checkpoint_interval, job.duration)
-        clone = dataclasses.replace(
-            job, id=len(self.jobs), submit_t=self.now,
-            duration=job.remaining + lost, state=JobState.PENDING,
-            start_t=None, end_t=None, assigned=[], remaining=None,
-            segments=[], fails_early=False)
-        self.jobs[clone.id] = clone
-        self._push(self.now + 0.05, "submit", (clone.id,))
-
-    def _gen_stragglers(self):
-        """Slow-node events (thermal throttling, flaky link): the paper's
-        fault table covers hard failures; stragglers are the soft mode a
-        1000-node deployment must also handle — synchronous training runs
-        at the slowest worker's pace."""
-        srng = np.random.default_rng(hash(("straggler", self.days)) % 2**31)
-        self._straggler_rng = srng
-        n = srng.poisson(self.straggler_rate_per_day * self.days)
-        for _ in range(n):
-            t = srng.uniform(0, self.days) * DAY
-            dur = float(srng.lognormal(np.log(2.0), 0.8))  # hours
-            self._push(t, "straggler", (dur,))
-
-    def _on_straggler(self, duration: float):
-        # afflicts a random busy node; the whole job slows (sync training)
-        busy = [i for i, j in self.cluster.alloc.items() if j is not None]
-        if not busy:
-            return
-        node = int(self._straggler_rng.choice(busy))
-        jid = self.cluster.alloc[node]
-        job = self.jobs[jid]
-        rec = {"t": self.now, "node": node, "job": jid,
-               "job_nodes": job.nodes, "duration_h": duration,
-               "mitigated": False, "lost_node_hours": 0.0}
-        if self.straggler_mitigation and job.preemptible and                 self.cluster.free_nodes():
-            # §8.7: swap the slow node for a healthy spare at the next
-            # checkpoint (~<=1h away); only the pre-swap window is slowed
-            slow_window = min(job.checkpoint_interval, duration)
-            rec["mitigated"] = True
-        else:
-            slow_window = duration
-        extra = slow_window * (self.straggler_slowdown - 1.0)
-        if job.state == JobState.RUNNING and job.remaining is not None:
-            job.remaining += extra
-            # stretch the scheduled end (stale-event guard handles the old)
-            self._push(job.start_t + job.remaining, "job_end", (jid,))
-            rec["lost_node_hours"] = extra * job.nodes
-        self.stragglers.append(rec)
-
-    def _on_repair(self, node: int):
-        self.cluster.restore(node)
-        self.sched.try_schedule(self)
-
-    def _on_noop(self):
-        pass
-
-
-# ===========================================================================
-# Analyses — one per paper Observation/Figure/Table
-SIZE_BINS = [(1, 1), (2, 2), (3, 4), (5, 8), (9, 16), (17, 32), (33, 64),
-             (65, 100)]
-
-
-def _bin_of(nodes: int) -> str:
-    for lo, hi in SIZE_BINS:
-        if lo <= nodes <= hi:
-            return f"{lo}-{hi}" if lo != hi else str(lo)
-    return "100+"
-
-
-def obs1_job_states(sim: Simulation) -> Dict:
-    done = [j for j in sim.jobs.values() if j.end_t is not None]
-    total_gpuh = sum(j.gpu_hours for j in done) or 1.0
-    by_count = defaultdict(int)
-    by_time = defaultdict(float)
-    for j in done:
-        by_count[j.state.value] += 1
-        by_time[j.state.value] += j.gpu_hours
-    n = len(done) or 1
-    return {
-        "count_share": {k: v / n for k, v in by_count.items()},
-        "gpu_time_share": {k: v / total_gpuh for k, v in by_time.items()},
-    }
-
-
-def obs2_job_sizes(sim: Simulation) -> Dict:
-    done = [j for j in sim.jobs.values() if j.end_t is not None]
-    total_gpuh = sum(j.gpu_hours for j in done) or 1.0
-    n = len(done) or 1
-    cnt = defaultdict(int)
-    tim = defaultdict(float)
-    for j in done:
-        b = _bin_of(j.nodes)
-        cnt[b] += 1
-        tim[b] += j.gpu_hours
-    return {
-        "count_share": {b: cnt[b] / n for b in cnt},
-        "gpu_time_share": {b: tim[b] / total_gpuh for b in tim},
-        "single_node_count_share": cnt["1"] / n,
-        "le4_count_share": (cnt["1"] + cnt["2"] + cnt["3-4"]) / n,
-        "ge17_gpu_time_share": sum(tim[b] for b in ("17-32", "33-64",
-                                                    "65-100") if b in tim)
-        / total_gpuh,
-        "single_node_time_share": tim["1"] / total_gpuh,
-    }
-
-
-def obs3_utilization(sim: Simulation) -> Dict:
-    by_bin = defaultdict(list)
-    low_by_bin = defaultdict(list)
-    for j in sim.jobs.values():
-        if j.end_t is None or j.runtime <= 0:
-            continue
-        b = _bin_of(j.nodes)
-        by_bin[b].append(j.gpu_util)
-        low_by_bin[b].append(j.low_util_frac)
-    return {
-        "median_util": {b: float(np.median(v)) for b, v in by_bin.items()},
-        "median_low_util_frac": {b: float(np.median(v))
-                                 for b, v in low_by_bin.items()},
-    }
-
-
-def obs4_runtime_cdf(sim: Simulation) -> Dict:
-    by_bin = defaultdict(list)
-    for j in sim.jobs.values():
-        if j.end_t is not None and j.runtime > 0:
-            by_bin[_bin_of(j.nodes)].append(j.runtime)
-    out = {}
-    for b, v in by_bin.items():
-        arr = np.sort(np.asarray(v))
-        out[b] = {
-            "median_h": float(np.median(arr)),
-            "p90_h": float(np.percentile(arr, 90)),
-            "frac_gt_week": float((arr > 168).mean()),
-            "n": len(arr),
-        }
-    return out
-
-
-def obs5_daily_submissions(sim: Simulation) -> Dict:
-    days = int(sim.days)
-    series = {c.value: np.zeros(days) for c in JobClass}
-    for j in sim.jobs.values():
-        d = int(j.submit_t // DAY)
-        if 0 <= d < days:
-            series[j.cls.value][d] += 1
-    # phase shift metric: CPT vs FT submission center of mass
-    def com(x):
-        x = np.asarray(x)
-        return float((x * np.arange(days)).sum() / max(x.sum(), 1))
-    return {
-        "series": {k: v.tolist() for k, v in series.items()},
-        "cpt_center_day": com(series["cpt"]),
-        "ft_center_day": com(series["ft"]),
-    }
-
-
-def obs6_faults(sim: Simulation) -> Dict:
-    by_comp = defaultdict(int)
-    by_recovery = defaultdict(int)
-    by_month = defaultdict(int)
-    for f in sim.faults:
-        by_comp[f.component] += 1
-        by_recovery[f.recovery] += 1
-        d = f.t / DAY
-        by_month["Jan" if d < 47 else "Feb" if d < 75 else "Mar"] += 1
-    return {"by_component": dict(by_comp),
-            "by_recovery": dict(by_recovery),
-            "by_month": dict(by_month),
-            "total": len(sim.faults)}
-
-
-def obs7_interconnect(sim: Simulation) -> Dict:
-    """Table 14 analog: peak single-port rates for two representative jobs
-    computed from the fabric model (uniform 64-node job A; 32-node job B
-    with a cross-rail degradation on 2 rails)."""
-    from repro.core import fabric
-    spec = sim.ports.spec
-    ports_a = PortCounters(spec)
-    ports_a.add_collective(list(range(64)), 22.6 * 1e9 * 60 / 2)
-    peak_a, rails_a = ports_a.peak_rate(list(range(64)))
-    ports_b = PortCounters(spec)
-    imb = np.ones(spec.rails)
-    imb[:2] = 8.0 / 18.9            # the Job B rail asymmetry
-    ports_b.add_collective(list(range(32)), 18.9 * 1e9 * 60 / 2,
-                           rail_imbalance=imb)
-    peak_b, rails_b = ports_b.peak_rate(list(range(32)))
-    return {
-        "job_a": {"nodes": 64, "nic_peak_gbs": round(peak_a, 1),
-                  "rails_gbs": [round(float(r), 1) for r in rails_a]},
-        "job_b": {"nodes": 32, "nic_peak_gbs": round(peak_b, 1),
-                  "rails_gbs": [round(float(r), 1) for r in rails_b]},
-    }
-
-
-def short_job_wait_stats(sim: Simulation) -> Dict:
-    waits = []
-    for j in sim.jobs.values():
-        if j.walltime <= sim.preempt_max_walltime and j.start_t is not None:
-            waits.append(j.start_t - j.submit_t)
-    if not waits:
-        return {"median_wait_h": 0.0, "p90_wait_h": 0.0, "n": 0}
-    arr = np.asarray(waits)
-    return {"median_wait_h": float(np.median(arr)),
-            "p90_wait_h": float(np.percentile(arr, 90)),
-            "n": len(arr)}

@@ -5,9 +5,10 @@ Models the rail-optimized two-pod leaf–spine 800 GbE fabric analytically:
 congestion response (ECN marking above a queue threshold, paper Table 15).
 
 Used by:
-  * the cluster simulator (per-job collective slowdowns, per-port
-    bandwidth telemetry -> Table 14 / Observation 7),
-  * benchmarks/interconnect.py (Table 14 reproduction),
+  * the cluster simulator, :mod:`repro.sched` (per-job collective
+    traffic, pod-aware placement, per-port bandwidth telemetry ->
+    Table 14 / Observation 7),
+  * benchmarks/comm_profile.py (Table 10 reproduction),
   * the scheduling cost model in benchmarks/mlperf_gpt3.py (cross-pod
     penalty observed in Table 10).
 """

@@ -54,7 +54,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             compiled = lowered.compile()
 
     mem = memory_analysis_dict(compiled)
-    cost = dict(compiled.cost_analysis() or {})
+    cost_raw = compiled.cost_analysis() or {}
+    if isinstance(cost_raw, (list, tuple)):   # jax<0.5 returns [dict]
+        cost_raw = cost_raw[0] if cost_raw else {}
+    cost = dict(cost_raw)
     hlo = compiled.as_text()
 
     cfg = cell.cfg

@@ -1,0 +1,47 @@
+"""``repro.sched`` — the pluggable cluster-scheduling subsystem.
+
+Decomposition of the former ``repro.core.cluster_sim`` monolith:
+
+  * :mod:`repro.sched.events`     — heap-based discrete-event queue
+  * :mod:`repro.sched.cluster`    — nodes, hot spares, drain/restore
+  * :mod:`repro.sched.policy`     — :class:`SchedulerPolicy` ABC + the
+    fifo / easy / preempt / topo implementations
+  * :mod:`repro.sched.workload`   — calibrated job generators
+  * :mod:`repro.sched.faults`     — Table 13 taxonomy + stragglers
+  * :mod:`repro.sched.simulation` — the :class:`Simulation` engine
+  * :mod:`repro.sched.analysis`   — paper §7 obs1–obs7 reproductions
+
+``repro.core.cluster_sim`` re-exports this namespace for backward
+compatibility.
+"""
+from repro.sched.analysis import (SIZE_BINS, _bin_of, cluster_utilization,
+                                  cross_pod_stats, obs1_job_states,
+                                  obs2_job_sizes, obs3_utilization,
+                                  obs4_runtime_cdf, obs5_daily_submissions,
+                                  obs6_faults, obs7_interconnect,
+                                  short_job_wait_stats, wait_time_stats)
+from repro.sched.cluster import Cluster
+from repro.sched.events import EventQueue
+from repro.sched.faults import (FAULT_TAXONOMY, FaultEvent,
+                                draw_fault_schedule,
+                                draw_straggler_schedule)
+from repro.sched.policy import (POLICIES, CheckpointPreemptPolicy,
+                                EasyBackfillPolicy, FifoBackfillPolicy,
+                                Scheduler, SchedulerPolicy,
+                                TopologyAwarePolicy, make_policy)
+from repro.sched.simulation import Simulation
+from repro.sched.workload import (DAY, HOUR, Job, JobClass, JobState,
+                                  MultiProjectWorkload, ProjectWorkload)
+
+__all__ = [
+    "DAY", "HOUR", "SIZE_BINS", "FAULT_TAXONOMY", "POLICIES",
+    "Cluster", "EventQueue", "FaultEvent", "Job", "JobClass", "JobState",
+    "MultiProjectWorkload", "ProjectWorkload", "Scheduler",
+    "SchedulerPolicy", "FifoBackfillPolicy", "EasyBackfillPolicy",
+    "CheckpointPreemptPolicy", "TopologyAwarePolicy", "Simulation",
+    "make_policy", "draw_fault_schedule", "draw_straggler_schedule",
+    "obs1_job_states", "obs2_job_sizes", "obs3_utilization",
+    "obs4_runtime_cdf", "obs5_daily_submissions", "obs6_faults",
+    "obs7_interconnect", "short_job_wait_stats", "wait_time_stats",
+    "cluster_utilization", "cross_pod_stats", "_bin_of",
+]

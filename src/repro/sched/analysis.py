@@ -1,0 +1,204 @@
+"""Analyses — one function per paper Observation / Figure / Table
+(Figures 3–7, Tables 13–14), plus the policy-matrix metrics consumed by
+``benchmarks/scheduler_study.py`` (wait times, realized utilization,
+cross-pod collective traffic)."""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict
+
+import numpy as np
+
+from repro.core.fabric import PortCounters
+from repro.sched.simulation import DAY, Simulation
+from repro.sched.workload import JobClass, JobState
+
+SIZE_BINS = [(1, 1), (2, 2), (3, 4), (5, 8), (9, 16), (17, 32), (33, 64),
+             (65, 100)]
+
+
+def _bin_of(nodes: int) -> str:
+    for lo, hi in SIZE_BINS:
+        if lo <= nodes <= hi:
+            return f"{lo}-{hi}" if lo != hi else str(lo)
+    return "100+"
+
+
+def obs1_job_states(sim: Simulation) -> Dict:
+    done = [j for j in sim.jobs.values() if j.end_t is not None]
+    total_gpuh = sum(j.gpu_hours for j in done) or 1.0
+    by_count = defaultdict(int)
+    by_time = defaultdict(float)
+    for j in done:
+        by_count[j.state.value] += 1
+        by_time[j.state.value] += j.gpu_hours
+    n = len(done) or 1
+    return {
+        "count_share": {k: v / n for k, v in by_count.items()},
+        "gpu_time_share": {k: v / total_gpuh for k, v in by_time.items()},
+    }
+
+
+def obs2_job_sizes(sim: Simulation) -> Dict:
+    done = [j for j in sim.jobs.values() if j.end_t is not None]
+    total_gpuh = sum(j.gpu_hours for j in done) or 1.0
+    n = len(done) or 1
+    cnt = defaultdict(int)
+    tim = defaultdict(float)
+    for j in done:
+        b = _bin_of(j.nodes)
+        cnt[b] += 1
+        tim[b] += j.gpu_hours
+    return {
+        "count_share": {b: cnt[b] / n for b in cnt},
+        "gpu_time_share": {b: tim[b] / total_gpuh for b in tim},
+        "single_node_count_share": cnt["1"] / n,
+        "le4_count_share": (cnt["1"] + cnt["2"] + cnt["3-4"]) / n,
+        "ge17_gpu_time_share": sum(tim[b] for b in ("17-32", "33-64",
+                                                    "65-100") if b in tim)
+        / total_gpuh,
+        "single_node_time_share": tim["1"] / total_gpuh,
+    }
+
+
+def obs3_utilization(sim: Simulation) -> Dict:
+    by_bin = defaultdict(list)
+    low_by_bin = defaultdict(list)
+    for j in sim.jobs.values():
+        if j.end_t is None or j.runtime <= 0:
+            continue
+        b = _bin_of(j.nodes)
+        by_bin[b].append(j.gpu_util)
+        low_by_bin[b].append(j.low_util_frac)
+    return {
+        "median_util": {b: float(np.median(v)) for b, v in by_bin.items()},
+        "median_low_util_frac": {b: float(np.median(v))
+                                 for b, v in low_by_bin.items()},
+    }
+
+
+def obs4_runtime_cdf(sim: Simulation) -> Dict:
+    by_bin = defaultdict(list)
+    for j in sim.jobs.values():
+        if j.end_t is not None and j.runtime > 0:
+            by_bin[_bin_of(j.nodes)].append(j.runtime)
+    out = {}
+    for b, v in by_bin.items():
+        arr = np.sort(np.asarray(v))
+        out[b] = {
+            "median_h": float(np.median(arr)),
+            "p90_h": float(np.percentile(arr, 90)),
+            "frac_gt_week": float((arr > 168).mean()),
+            "n": len(arr),
+        }
+    return out
+
+
+def obs5_daily_submissions(sim: Simulation) -> Dict:
+    days = int(sim.days)
+    series = {c.value: np.zeros(days) for c in JobClass}
+    for j in sim.jobs.values():
+        d = int(j.submit_t // DAY)
+        if 0 <= d < days:
+            series[j.cls.value][d] += 1
+    # phase shift metric: CPT vs FT submission center of mass
+    def com(x):
+        x = np.asarray(x)
+        return float((x * np.arange(days)).sum() / max(x.sum(), 1))
+    return {
+        "series": {k: v.tolist() for k, v in series.items()},
+        "cpt_center_day": com(series["cpt"]),
+        "ft_center_day": com(series["ft"]),
+    }
+
+
+def obs6_faults(sim: Simulation) -> Dict:
+    by_comp = defaultdict(int)
+    by_recovery = defaultdict(int)
+    by_month = defaultdict(int)
+    for f in sim.faults:
+        by_comp[f.component] += 1
+        by_recovery[f.recovery] += 1
+        d = f.t / DAY
+        by_month["Jan" if d < 47 else "Feb" if d < 75 else "Mar"] += 1
+    return {"by_component": dict(by_comp),
+            "by_recovery": dict(by_recovery),
+            "by_month": dict(by_month),
+            "total": len(sim.faults)}
+
+
+def obs7_interconnect(sim: Simulation) -> Dict:
+    """Table 14 analog: peak single-port rates for two representative jobs
+    computed from the fabric model (uniform 64-node job A; 32-node job B
+    with a cross-rail degradation on 2 rails)."""
+    spec = sim.ports.spec
+    ports_a = PortCounters(spec)
+    ports_a.add_collective(list(range(64)), 22.6 * 1e9 * 60 / 2)
+    peak_a, rails_a = ports_a.peak_rate(list(range(64)))
+    ports_b = PortCounters(spec)
+    imb = np.ones(spec.rails)
+    imb[:2] = 8.0 / 18.9            # the Job B rail asymmetry
+    ports_b.add_collective(list(range(32)), 18.9 * 1e9 * 60 / 2,
+                           rail_imbalance=imb)
+    peak_b, rails_b = ports_b.peak_rate(list(range(32)))
+    return {
+        "job_a": {"nodes": 64, "nic_peak_gbs": round(peak_a, 1),
+                  "rails_gbs": [round(float(r), 1) for r in rails_a]},
+        "job_b": {"nodes": 32, "nic_peak_gbs": round(peak_b, 1),
+                  "rails_gbs": [round(float(r), 1) for r in rails_b]},
+    }
+
+
+def short_job_wait_stats(sim: Simulation) -> Dict:
+    waits = []
+    for j in sim.jobs.values():
+        if j.walltime <= sim.preempt_max_walltime and \
+                j.first_start_t is not None:
+            waits.append(j.first_start_t - j.submit_t)
+    if not waits:
+        return {"median_wait_h": 0.0, "p90_wait_h": 0.0, "n": 0}
+    arr = np.asarray(waits)
+    return {"median_wait_h": float(np.median(arr)),
+            "p90_wait_h": float(np.percentile(arr, 90)),
+            "n": len(arr)}
+
+
+# -- policy-matrix metrics (benchmarks/scheduler_study.py) -------------------
+def wait_time_stats(sim: Simulation) -> Dict:
+    """Queue waits (submit -> first dispatch) over all started jobs."""
+    waits = [j.first_start_t - j.submit_t for j in sim.jobs.values()
+             if j.first_start_t is not None]
+    if not waits:
+        return {"median_wait_h": 0.0, "p90_wait_h": 0.0, "mean_wait_h": 0.0,
+                "n": 0}
+    arr = np.asarray(waits)
+    return {"median_wait_h": float(np.median(arr)),
+            "p90_wait_h": float(np.percentile(arr, 90)),
+            "mean_wait_h": float(arr.mean()),
+            "n": len(arr)}
+
+
+def cluster_utilization(sim: Simulation) -> Dict:
+    """Realized allocation: node-hours dispatched / capacity node-hours.
+
+    Capacity is the nominal 100-node fabric for the whole horizon —
+    activated hot spares (which can push allocation slightly above the
+    nominal denominator) and drained node-hours are deliberately not
+    netted out, so the metric stays comparable across fault histories."""
+    horizon = sim.days * DAY
+    alloc_nh = sum((e - s) * n for j in sim.jobs.values()
+                   for s, e, n in j.segments)
+    capacity_nh = sim.cluster.total * horizon
+    return {"allocated_node_hours": float(alloc_nh),
+            "capacity_node_hours": float(capacity_nh),
+            "allocation_frac": float(alloc_nh / capacity_nh)}
+
+
+def cross_pod_stats(sim: Simulation) -> Dict:
+    """Collective-traffic locality split (Table 10 penalty exposure)."""
+    total = sim.collective_bytes or 1.0
+    return {"collective_gb": sim.collective_bytes / 1e9,
+            "cross_pod_gb": sim.cross_pod_bytes / 1e9,
+            "cross_pod_frac": sim.cross_pod_bytes / total,
+            "multi_node_jobs": sim.multi_node_jobs,
+            "cross_pod_jobs": sim.cross_pod_jobs}

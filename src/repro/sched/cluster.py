@@ -1,0 +1,74 @@
+"""Cluster state: nodes, hot spares, health (drain/restore), allocation.
+
+Models the SAKURAONE deployment of paper §4: 100 compute nodes × 8 GPUs
+on a two-pod rail-optimized fabric (:mod:`repro.core.fabric`), plus a
+small pool of hot spares that activate when a failed node goes out for
+vendor replacement (Table 13 recovery modes).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.fabric import FABRIC, FabricSpec, pod_of_node
+
+
+class Cluster:
+    """Node inventory with allocation, drain/restore, and hot spares.
+
+    Node states: ``up`` (schedulable), ``drained`` (fault, awaiting
+    repair), ``spare`` (cold standby — becomes ``up`` via
+    :meth:`activate_spare` and never returns to the spare pool).
+    """
+
+    def __init__(self, spec: FabricSpec = FABRIC, hot_spares: int = 4):
+        self.spec = spec
+        self.total = spec.nodes
+        self.hot_spares = hot_spares
+        self.node_state = ["up"] * (self.total + hot_spares)
+        self.alloc: Dict[int, Optional[int]] = {i: None
+                                                for i in range(self.total
+                                                               + hot_spares)}
+        for i in range(self.total, self.total + hot_spares):
+            self.node_state[i] = "spare"
+
+    def free_nodes(self) -> List[int]:
+        """Schedulable idle nodes in ascending index order."""
+        return [i for i in range(self.total + self.hot_spares)
+                if self.node_state[i] == "up" and self.alloc[i] is None]
+
+    def free_by_pod(self, free: Optional[List[int]] = None
+                    ) -> Dict[int, List[int]]:
+        """Free nodes grouped by fabric pod (for topology-aware packing).
+
+        Hot spares (ids >= spec.nodes) land in pod 1 via ``pod_of_node``
+        — an approximation standing in for the production practice of
+        re-cabling the spare into the replaced node's rails."""
+        if free is None:
+            free = self.free_nodes()
+        by_pod: Dict[int, List[int]] = {}
+        for n in free:
+            by_pod.setdefault(pod_of_node(n, self.spec), []).append(n)
+        return by_pod
+
+    def allocate(self, nodes: List[int], jid: int):
+        for n in nodes:
+            assert self.node_state[n] == "up" and self.alloc[n] is None
+            self.alloc[n] = jid
+
+    def release(self, nodes: List[int]):
+        for n in nodes:
+            self.alloc[n] = None
+
+    def drain(self, node: int):
+        self.node_state[node] = "drained"
+
+    def restore(self, node: int):
+        if self.node_state[node] == "drained":
+            self.node_state[node] = "up"
+
+    def activate_spare(self) -> Optional[int]:
+        for i in range(self.total, self.total + self.hot_spares):
+            if self.node_state[i] == "spare":
+                self.node_state[i] = "up"
+                return i
+        return None

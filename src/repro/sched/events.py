@@ -1,0 +1,35 @@
+"""Discrete-event engine for the cluster simulator.
+
+A minimal heap-based event queue with stable FIFO tie-breaking: events
+are ``(time, seq, kind, payload)`` tuples; ``seq`` is a monotonically
+increasing counter so two events at the same timestamp pop in push
+order.  Handlers are dispatched by name (``_on_<kind>``) by the
+:class:`repro.sched.simulation.Simulation` main loop.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Tuple
+
+Event = Tuple[float, int, str, tuple]
+
+
+class EventQueue:
+    """Heap-based priority queue of simulation events."""
+
+    def __init__(self):
+        self._heap: List[Event] = []
+        self._seq = 0
+
+    def push(self, t: float, kind: str, payload: tuple = ()) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, kind, payload))
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

@@ -1,0 +1,73 @@
+"""Fault taxonomy and injection schedules (paper Table 13 + §8.7).
+
+Hard failures follow Table 13's component taxonomy with the January
+burn-in decay (13/5/3 events over the Jan–Mar months) and its recovery
+modes (node restart vs multi-day vendor replacement covered by a hot
+spare).  Stragglers are the *soft* failure mode (thermal throttling,
+flaky links): synchronous training runs at the slowest worker's pace,
+so one slow node taxes the whole job.
+
+This module only *draws* the schedules; the event handlers that apply
+them to cluster state live in :mod:`repro.sched.simulation`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.sched.workload import DAY
+
+
+@dataclass
+class FaultEvent:
+    t: float
+    component: str
+    node: Optional[int]
+    recovery: str                 # restart | replace | config | degrade
+    recovery_time: float          # hours until capacity restored
+    killed_jobs: List[int] = field(default_factory=list)
+
+
+# Table 13 taxonomy with recovery modes
+FAULT_TAXONOMY = [
+    ("gpu", 9 / 21, "node"),
+    ("nvlink_pcie", 4 / 21, "node"),
+    ("nic_transceiver", 1 / 21, "node"),
+    ("interconnect_switch", 5 / 21, "switch"),
+    ("storage_switch", 1 / 21, "storage"),
+    ("misconfiguration", 1 / 21, "config"),
+]
+
+# monthly intensity: 13 / 5 / 3 over the Jan–Mar window (days 17+)
+MONTH_RATES = [(17, 47, 13), (47, 75, 5), (75, 106, 3)]
+
+
+def draw_fault_schedule(rng: np.random.Generator, days: float
+                        ) -> List[Tuple[float, str]]:
+    """(time_hours, component) fault arrivals with the burn-in decay."""
+    out: List[Tuple[float, str]] = []
+    for lo, hi, n_events in MONTH_RATES:
+        if lo >= days:                   # short-horizon runs
+            continue
+        n = rng.poisson(n_events)
+        for _ in range(n):
+            t = rng.uniform(lo, min(hi, days)) * DAY
+            comp = rng.choice([c for c, _, _ in FAULT_TAXONOMY],
+                              p=[p for _, p, _ in FAULT_TAXONOMY])
+            out.append((t, str(comp)))
+    return out
+
+
+def draw_straggler_schedule(rng: np.random.Generator, days: float,
+                            rate_per_day: float
+                            ) -> List[Tuple[float, float]]:
+    """(time_hours, duration_hours) slow-node episodes, Poisson arrivals."""
+    out: List[Tuple[float, float]] = []
+    n = rng.poisson(rate_per_day * days)
+    for _ in range(n):
+        t = rng.uniform(0, days) * DAY
+        dur = float(rng.lognormal(np.log(2.0), 0.8))   # hours
+        out.append((t, dur))
+    return out

@@ -1,0 +1,326 @@
+"""Discrete-event simulation of the SAKURAONE single-tenant LLM project
+(paper §7 Observations 1–7, §8.5 scheduling implications).
+
+Wires together the subsystem modules:
+
+  * :mod:`repro.sched.events`   — heap-based event queue,
+  * :mod:`repro.sched.cluster`  — nodes, hot spares, drain/restore,
+  * :mod:`repro.sched.policy`   — pluggable :class:`SchedulerPolicy`,
+  * :mod:`repro.sched.workload` — calibrated job generators,
+  * :mod:`repro.sched.faults`   — Table 13 taxonomy + stragglers,
+  * :mod:`repro.sched.analysis` — the obs1–obs7 reproductions.
+
+All randomness is seeded — the calibration tests assert the paper's
+aggregate statistics within tolerance, and two ``Simulation(seed=k)``
+runs produce identical telemetry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core.fabric import PortCounters, pod_of_node
+from repro.sched.cluster import Cluster
+from repro.sched.events import EventQueue
+from repro.sched.faults import (FAULT_TAXONOMY, FaultEvent,
+                                draw_fault_schedule,
+                                draw_straggler_schedule)
+from repro.sched.policy import Scheduler, SchedulerPolicy, make_policy
+from repro.sched.workload import (DAY, HOUR, Job, JobClass, JobState,
+                                  ProjectWorkload)
+
+_STRAGGLER_STREAM = 0x57A6   # SeedSequence spawn key for straggler draws
+
+
+class Simulation:
+    def __init__(self, *, days: float = 105.0, seed: int = 0,
+                 policy: Union[str, SchedulerPolicy, None] = None,
+                 preemption: bool = False, rate_scale: float = 1.0,
+                 fault_seed: Optional[int] = None,
+                 workload: Optional[ProjectWorkload] = None,
+                 straggler_mitigation: bool = False,
+                 straggler_rate_per_day: float = 0.35):
+        self.cluster = Cluster()
+        self.sched = Scheduler(self.cluster,
+                               policy=make_policy(policy, preemption))
+        self.workload = workload if workload is not None else \
+            ProjectWorkload(days=days, seed=seed, rate_scale=rate_scale)
+        self.jobs: Dict[int, Job] = {}
+        self.now = 0.0
+        self.days = days
+        self.events = EventQueue()
+        self.faults: List[FaultEvent] = []
+        self.ports = PortCounters()
+        self.rng = np.random.default_rng(
+            fault_seed if fault_seed is not None else seed + 1)
+        self.pending_preemptions: Dict[int, int] = {}
+        self.preempt_max_walltime = 2.0   # hours: "short" jobs
+        self.wait_times: Dict[JobClass, List[float]] = defaultdict(list)
+        self.straggler_mitigation = straggler_mitigation
+        self.straggler_rate_per_day = straggler_rate_per_day
+        self.stragglers: List[Dict] = []   # telemetry
+        self.straggler_slowdown = 1.6      # synchronous step-time multiplier
+        self._straggler_rng = np.random.default_rng(
+            np.random.SeedSequence([_STRAGGLER_STREAM,
+                                    fault_seed if fault_seed is not None
+                                    else seed]))
+        # per-job collective traffic split by fabric locality (Table 10)
+        self.collective_bytes = 0.0
+        self.cross_pod_bytes = 0.0
+        self.multi_node_jobs = 0
+        self.cross_pod_jobs = 0
+
+    # -- event plumbing ----------------------------------------------------
+    def _push(self, t: float, kind: str, payload: tuple = ()):
+        self.events.push(t, kind, payload)
+
+    def schedule_job_end(self, job: Job):
+        if job.fails_early:
+            dt = min(float(np.random.default_rng(job.id).exponential(0.1)),
+                     job.duration)
+            self._push(self.now + dt, "job_fail", (job.id,))
+        else:
+            self._push(self.now + job.remaining, "job_end", (job.id,))
+
+    def schedule_checkpoint(self, job: Job):
+        self._push(self.now + job.checkpoint_interval, "checkpoint",
+                   (job.id, job.start_t))
+
+    # -- main loop ----------------------------------------------------------
+    def run(self) -> "Simulation":
+        for job in self.workload.generate():
+            self.jobs[job.id] = job
+            self._push(job.submit_t, "submit", (job.id,))
+        for t, comp in draw_fault_schedule(self.rng, self.days):
+            self._push(t, "fault", (comp,))
+        for t, dur in draw_straggler_schedule(self._straggler_rng,
+                                              self.days,
+                                              self.straggler_rate_per_day):
+            self._push(t, "straggler", (dur,))
+        horizon = self.days * DAY
+
+        while self.events:
+            t, _, kind, payload = self.events.pop()
+            if t > horizon:
+                break
+            self.now = t
+            getattr(self, f"_on_{kind}")(*payload)
+
+        # close out still-running segments at horizon (project ends);
+        # empty the queue first so _finish's try_schedule can't start new
+        # jobs during the closeout sweep
+        self.now = horizon
+        self.sched.queue = []
+        for j in list(self.jobs.values()):
+            if j.state == JobState.RUNNING:
+                self._finish(j, JobState.CANCELLED)   # project ends
+            elif j.state == JobState.PENDING:
+                j.state = JobState.CANCELLED
+                j.end_t = horizon
+                # preempted-but-never-resumed: its run segments still
+                # exchanged collectives — account them (on last_nodes)
+                self._account_traffic(j)
+        return self
+
+    # -- event handlers ------------------------------------------------------
+    def _on_submit(self, jid: int):
+        self.sched.queue.append(jid)
+        self.sched.try_schedule(self)
+
+    def _close_segment(self, job: Job):
+        if job.segments and np.isnan(job.segments[-1][1]):
+            s, _, n = job.segments[-1]
+            job.segments[-1] = (s, self.now, n)
+
+    def _finish(self, job: Job, state: JobState):
+        self._close_segment(job)
+        job.state = state
+        job.end_t = self.now
+        self._account_traffic(job)
+        self.cluster.release(job.assigned)
+        job.assigned = []
+        self.sched.note_stopped(job)
+        self.sched.try_schedule(self)
+
+    def _account_traffic(self, job: Job):
+        """NIC counters for Observation 7 (per-rail byte accounting of the
+        job's collectives over its last minute window) plus the cross-pod
+        locality split that the topology-aware policy optimizes.  Runs
+        once per job at its terminal state (including the horizon closeout
+        of preempted-but-never-resumed victims, via ``last_nodes``)."""
+        nodes = job.assigned or job.last_nodes
+        if job.nodes < 2 or not job.segments or not nodes:
+            return
+        # DP all-reduce of a ~70B model's grads each step, bf16
+        bytes_per_gpu = 70e9 * 2 / (job.nodes * 8) * 16
+        # hot spares sit outside the modeled fabric: no port position
+        # (in production the spare is re-cabled into the failed node's
+        # rails, so attributing it to that pod is the right approximation)
+        port_nodes = [n for n in nodes if n < self.ports.spec.nodes]
+        self.ports.add_collective(port_nodes, bytes_per_gpu)
+        total = bytes_per_gpu * job.nodes * 8
+        self.collective_bytes += total
+        self.multi_node_jobs += 1
+        pods = {pod_of_node(n, self.cluster.spec) for n in nodes}
+        if len(pods) > 1:
+            self.cross_pod_bytes += total
+            self.cross_pod_jobs += 1
+
+    def _on_job_end(self, jid: int):
+        job = self.jobs[jid]
+        if job.state != JobState.RUNNING:
+            return
+        # guard against stale end events after preemption/resume
+        if job.start_t is not None and job.remaining is not None and \
+                self.now + 1e-9 < job.start_t + job.remaining:
+            return
+        job.remaining = 0.0
+        self._finish(job,
+                     JobState.CANCELLED if job.will_cancel
+                     else JobState.COMPLETED)
+
+    def _on_job_fail(self, jid: int):
+        job = self.jobs[jid]
+        if job.state != JobState.RUNNING:
+            return
+        job.remaining = 0.0
+        self._finish(job, JobState.FAILED)
+
+    def _on_checkpoint(self, jid: int, started: float):
+        job = self.jobs.get(jid)
+        if job is None or job.state != JobState.RUNNING or \
+                job.start_t != started:
+            return
+        # checkpoint-completion = safe preemption point (§8.5)
+        if jid in self.pending_preemptions:
+            short_id = self.pending_preemptions.pop(jid)
+            self._preempt(job, short_id)
+            return
+        self.schedule_checkpoint(job)
+
+    def _preempt(self, victim: Job, short_id: int):
+        short = self.jobs.get(short_id)
+        if short is None or short.state != JobState.PENDING:
+            # beneficiary already ran; keep the victim going
+            self.schedule_checkpoint(victim)
+            return
+        elapsed = self.now - victim.start_t
+        victim.remaining = max(victim.remaining - elapsed, 0.0)
+        self._close_segment(victim)
+        victim.last_nodes = list(victim.assigned)
+        freed = list(victim.assigned)
+        self.cluster.release(victim.assigned)
+        victim.assigned = []
+        victim.state = JobState.PENDING
+        victim.start_t = None
+        self.sched.note_stopped(victim)
+        # start the short job on the freed nodes FIRST (that's the point of
+        # the preemption), then the victim rejoins at the queue head so it
+        # resumes from checkpoint as soon as capacity allows (§8.5)
+        if short.id in self.sched.queue:
+            self.sched.queue.remove(short.id)
+        self.sched._start(self, short, freed[:short.nodes])
+        self.sched.queue.insert(0, victim.id)
+        self.sched.try_schedule(self)
+
+    def _on_fault(self, component: str):
+        taxonomy = {c: scope for c, _, scope in FAULT_TAXONOMY}
+        scope = taxonomy[component]
+        ev = FaultEvent(t=self.now, component=component, node=None,
+                        recovery="restart", recovery_time=0.3)
+        if scope == "node":
+            up = [i for i, s in enumerate(self.cluster.node_state)
+                  if s == "up"]
+            node = int(self.rng.choice(up))
+            ev.node = node
+            jid = self.cluster.alloc[node]
+            # drain BEFORE finishing the victim: _finish triggers a
+            # scheduling pass, which must not re-allocate the failed node
+            self.cluster.drain(node)
+            if jid is not None:
+                job = self.jobs[jid]
+                ev.killed_jobs.append(jid)
+                job.remaining = max(
+                    (job.remaining or 0) - (self.now - job.start_t), 0.0)
+                # paper §7 Obs 6: infra faults mostly surfaced as *manual
+                # cancellations*, not scheduler FAILED states — FAILED time
+                # stays ~0.3% because app failures die early
+                self._finish(job, JobState.CANCELLED)
+                if job.cls in (JobClass.CPT, JobClass.FT) and \
+                        job.remaining > 0.5:
+                    self._resubmit_from_checkpoint(job)
+            if component == "gpu" and self.rng.random() < 0.33 or \
+                    component == "nic_transceiver":
+                # vendor-assisted replacement (days), hot spare covers
+                ev.recovery = "replace"
+                ev.recovery_time = float(self.rng.uniform(48, 300))
+                self.cluster.activate_spare()
+                self._push(self.now + ev.recovery_time, "repair", (node,))
+            else:
+                ev.recovery = "restart"
+                ev.recovery_time = float(self.rng.uniform(0.1, 0.6))
+                self._push(self.now + ev.recovery_time, "repair", (node,))
+        elif scope == "switch":
+            # leaf/spine event: degrade or reboot; reboot may kill jobs in pod
+            if self.rng.random() < 0.4:
+                ev.recovery = "restart"
+                ev.recovery_time = float(self.rng.uniform(0.1, 0.5))
+            else:
+                ev.recovery = "degrade"
+                ev.recovery_time = float(self.rng.uniform(0.2, 2.0))
+        elif scope == "storage":
+            ev.recovery = "restart"
+            ev.recovery_time = float(self.rng.uniform(0.1, 0.5))
+        else:  # config
+            ev.recovery = "config"
+            ev.recovery_time = float(self.rng.uniform(0.2, 1.0))
+        self.faults.append(ev)
+        self.sched.try_schedule(self)
+
+    def _resubmit_from_checkpoint(self, job: Job):
+        """Restart a training job from its last hourly checkpoint."""
+        lost = min(job.checkpoint_interval, job.duration)
+        clone = dataclasses.replace(
+            job, id=len(self.jobs), submit_t=self.now,
+            duration=job.remaining + lost, state=JobState.PENDING,
+            start_t=None, end_t=None, assigned=[], last_nodes=[],
+            remaining=None, segments=[], fails_early=False)
+        self.jobs[clone.id] = clone
+        self._push(self.now + 0.05, "submit", (clone.id,))
+
+    def _on_straggler(self, duration: float):
+        # afflicts a random busy node; the whole job slows (sync training)
+        busy = [i for i, j in self.cluster.alloc.items() if j is not None]
+        if not busy:
+            return
+        node = int(self._straggler_rng.choice(busy))
+        jid = self.cluster.alloc[node]
+        job = self.jobs[jid]
+        rec = {"t": self.now, "node": node, "job": jid,
+               "job_nodes": job.nodes, "duration_h": duration,
+               "mitigated": False, "lost_node_hours": 0.0}
+        if self.straggler_mitigation and job.preemptible and \
+                self.cluster.free_nodes():
+            # §8.7: swap the slow node for a healthy spare at the next
+            # checkpoint (~<=1h away); only the pre-swap window is slowed
+            slow_window = min(job.checkpoint_interval, duration)
+            rec["mitigated"] = True
+        else:
+            slow_window = duration
+        extra = slow_window * (self.straggler_slowdown - 1.0)
+        if job.state == JobState.RUNNING and job.remaining is not None:
+            job.remaining += extra
+            # stretch the scheduled end (stale-event guard handles the old)
+            self._push(job.start_t + job.remaining, "job_end", (jid,))
+            rec["lost_node_hours"] = extra * job.nodes
+        self.stragglers.append(rec)
+
+    def _on_repair(self, node: int):
+        self.cluster.restore(node)
+        self.sched.try_schedule(self)
+
+    def _on_noop(self):
+        pass

@@ -1,0 +1,198 @@
+"""Job model and workload generators.
+
+:class:`ProjectWorkload` is calibrated to the paper's single-tenant
+medical-LLM project (§7): a dev/eval floor (1–2 nodes, numerous,
+low-util), a CPT phase (17–32 nodes, long-tailed, loss-curve monitored
+=> user cancellations), and a fine-tuning phase that ramps mid-project
+(3–16 nodes) — Figure 7's temporal shift.
+
+:class:`MultiProjectWorkload` is a beyond-paper contended scenario: K
+staggered projects share the same 100-node cluster, which is the regime
+"Characterization of LLM Development in the Datacenter"
+(arXiv:2403.07648) studies and where scheduler policy dominates
+realized utilization.
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+HOUR = 1.0          # simulation time unit: hours
+DAY = 24.0
+
+
+class JobState(str, enum.Enum):
+    PENDING = "PENDING"
+    RUNNING = "RUNNING"
+    COMPLETED = "COMPLETED"
+    CANCELLED = "CANCELLED"
+    FAILED = "FAILED"
+    PREEMPTED = "PREEMPTED"     # transient (resumed later)
+
+
+class JobClass(str, enum.Enum):
+    DEV = "dev"            # 1 node: interactive, eval, preprocessing
+    SMALL = "small"        # 2–4 nodes
+    FT = "ft"              # 3–16 nodes fine-tuning (phase 2)
+    CPT = "cpt"            # 17–32 nodes continued pretraining
+
+
+@dataclass
+class Job:
+    id: int
+    cls: JobClass
+    submit_t: float
+    nodes: int
+    duration: float               # actual run length if uninterrupted
+    walltime: float               # requested max walltime
+    will_cancel: bool             # user cancels at `duration` (vs completes)
+    fails_early: bool             # app-level failure shortly after start
+    gpu_util: float               # average utilization (%)
+    low_util_frac: float          # fraction of time below 20%
+    checkpoint_interval: float = 1.0      # hours (multi-TB hourly, §4.3)
+    preemptible: bool = False
+    # runtime bookkeeping
+    state: JobState = JobState.PENDING
+    start_t: Optional[float] = None
+    end_t: Optional[float] = None
+    assigned: List[int] = field(default_factory=list)
+    last_nodes: List[int] = field(default_factory=list)   # of last segment
+    remaining: Optional[float] = None
+    segments: List[Tuple[float, float, int]] = field(default_factory=list)
+
+    @property
+    def gpu_hours(self) -> float:
+        return sum((e - s) * n * 8 for s, e, n in self.segments)
+
+    @property
+    def runtime(self) -> float:
+        return sum(e - s for s, e, _ in self.segments)
+
+    @property
+    def first_start_t(self) -> Optional[float]:
+        """Time of first dispatch (unchanged by preempt/resume)."""
+        return self.segments[0][0] if self.segments else self.start_t
+
+
+class ProjectWorkload:
+    """Calibrated single-tenant LLM-project generator (see module doc)."""
+
+    def __init__(self, *, days: float = 105.0, seed: int = 0,
+                 rate_scale: float = 1.0):
+        self.days = days
+        self.rng = np.random.default_rng(seed)
+        self.rate_scale = rate_scale
+
+    # class mix calibrated to Observations 1–5 (targets in tests)
+    def _daily_rates(self, day: float) -> Dict[JobClass, float]:
+        r: Dict[JobClass, float] = {}
+        ramp = min(1.0, 0.4 + 0.6 * day / self.days)
+        r[JobClass.DEV] = 8.9 * ramp
+        r[JobClass.SMALL] = 0.95 * ramp
+        # CPT window: day 30 (mid-Jan) .. day 80 (early Mar)
+        r[JobClass.CPT] = 0.66 if 30 <= day <= 80 else 0.02
+        # fine-tuning ramps from day 60 (mid-Feb)
+        if day >= 60:
+            r[JobClass.FT] = 2.4 * min(1.0, (day - 60) / 15)
+        else:
+            r[JobClass.FT] = 0.25       # early small-scale experiments
+        return {k: v * self.rate_scale for k, v in r.items()}
+
+    def _make_job(self, jid: int, cls: JobClass, t: float) -> Job:
+        rng = self.rng
+        if cls == JobClass.DEV:
+            nodes = 1
+            dur = float(np.clip(rng.lognormal(math.log(0.3), 2.05),
+                                0.02, 240))
+            util = float(np.clip(rng.normal(23.4, 12), 2, 80))
+            low = float(np.clip(rng.normal(0.69, 0.12), 0.2, 0.98))
+            cancel_p, fail_p = 0.10, 0.20
+        elif cls == JobClass.SMALL:
+            nodes = int(rng.integers(2, 5))
+            dur = float(np.clip(rng.lognormal(math.log(2.1), 1.8),
+                                0.05, 240))
+            util = float(np.clip(rng.normal(17.7 if nodes == 2 else 45, 15),
+                                 2, 95))
+            low = float(np.clip(rng.normal(0.76 if nodes == 2 else 0.5,
+                                           0.12), 0.05, 0.98))
+            cancel_p, fail_p = 0.15, 0.18
+        elif cls == JobClass.FT:
+            nodes = int(rng.integers(3, 17))
+            dur = float(np.clip(rng.lognormal(math.log(11.0), 1.3),
+                                0.2, 400))
+            med = 92.2 if nodes <= 8 else 42.0
+            util = float(np.clip(rng.normal(med, 18), 5, 100))
+            low = float(np.clip(rng.normal(0.12 if nodes <= 8 else 0.35,
+                                           0.1), 0.0, 0.9))
+            cancel_p, fail_p = 0.28, 0.12
+        else:  # CPT
+            nodes = int(rng.integers(17, 33))
+            dur = float(np.clip(rng.lognormal(math.log(32.0), 1.55),
+                                1.0, 1200))
+            util = float(np.clip(rng.normal(98.4, 1.5), 90, 100))
+            low = float(np.clip(rng.normal(0.011, 0.01), 0.0, 0.1))
+            cancel_p, fail_p = 0.70, 0.06
+        will_cancel = bool(self.rng.random() < cancel_p)
+        fails_early = bool(self.rng.random() < fail_p)
+        return Job(
+            id=jid, cls=cls, submit_t=t, nodes=nodes, duration=dur,
+            walltime=dur * float(rng.uniform(1.3, 3.0)),
+            will_cancel=will_cancel, fails_early=fails_early,
+            gpu_util=util, low_util_frac=low,
+            preemptible=(cls == JobClass.CPT),
+        )
+
+    def generate(self) -> List[Job]:
+        jobs: List[Job] = []
+        jid = 0
+        for day in range(int(self.days)):
+            rates = self._daily_rates(day)
+            for cls, lam in rates.items():
+                n = self.rng.poisson(lam)
+                for _ in range(n):
+                    t = (day + float(self.rng.random())) * DAY
+                    jobs.append(self._make_job(jid, cls, t))
+                    jid += 1
+        jobs.sort(key=lambda j: j.submit_t)
+        for i, j in enumerate(jobs):
+            j.id = i
+        return jobs
+
+
+class MultiProjectWorkload:
+    """K overlapping single-tenant projects contending for one cluster.
+
+    Each project is a :class:`ProjectWorkload` with its own seed and a
+    staggered start offset, so CPT windows overlap partially — the
+    contended regime where backfill/preemption/topology policies
+    separate (the scheduler_study policy matrix runs this too).
+    """
+
+    def __init__(self, *, days: float = 105.0, seed: int = 0,
+                 projects: int = 2, stagger_days: float = 20.0,
+                 rate_scale: float = 1.0):
+        self.days = days
+        self.projects = projects
+        self.stagger_days = stagger_days
+        self._members = [
+            ProjectWorkload(days=max(days - k * stagger_days, 1.0),
+                            seed=seed + 1000 * k, rate_scale=rate_scale)
+            for k in range(projects)
+        ]
+
+    def generate(self) -> List[Job]:
+        jobs: List[Job] = []
+        for k, wl in enumerate(self._members):
+            offset = k * self.stagger_days * DAY
+            for j in wl.generate():
+                j.submit_t += offset
+                jobs.append(j)
+        jobs = [j for j in jobs if j.submit_t < self.days * DAY]
+        jobs.sort(key=lambda j: j.submit_t)
+        for i, j in enumerate(jobs):
+            j.id = i
+        return jobs

@@ -1,0 +1,81 @@
+"""Minimal stand-in for the ``hypothesis`` API used by this test suite.
+
+On environments without hypothesis installed the property tests fall
+back to deterministic random sampling: ``@given`` draws
+``max_examples`` examples per strategy from a fixed-seed RNG and runs
+the test once per example.  Only the strategy combinators this repo
+uses are implemented (integers, sampled_from, tuples, lists).
+
+Usage (see test modules)::
+
+    try:
+        import hypothesis.strategies as st
+        from hypothesis import given, settings
+    except ImportError:
+        from _hyp_fallback import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def _tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def _lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(size)]
+    return _Strategy(draw)
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, sampled_from=_sampled_from, tuples=_tuples,
+    lists=_lists)
+
+
+def given(*strategies_args):
+    def decorate(fn):
+        # deliberately NOT functools.wraps: pytest must see a zero-arg
+        # signature, not the strategy parameters (it would treat them as
+        # fixtures)
+        def runner():
+            rng = np.random.default_rng(0)
+            for _ in range(getattr(runner, "_max_examples",
+                                   _DEFAULT_MAX_EXAMPLES)):
+                drawn = [s.example(rng) for s in strategies_args]
+                fn(*drawn)
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+    return decorate

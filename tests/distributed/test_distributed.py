@@ -57,18 +57,19 @@ def test_hierarchical_collectives_match_flat():
     _run_child(r"""
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from repro.core.collectives import hierarchical_psum, ring_all_reduce
+from repro.core.collectives import (hierarchical_psum, ring_all_reduce,
+                                    shard_map_compat)
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
-sm = lambda fn: jax.shard_map(fn, mesh=mesh, in_specs=P(("pod", "data")),
-                              out_specs=P(("pod", "data")), check_vma=False)
+sm = lambda fn: shard_map_compat(fn, mesh=mesh, in_specs=P(("pod", "data")),
+                                 out_specs=P(("pod", "data")))
 flat = sm(lambda v: jax.lax.psum(jax.lax.psum(v, "data"), "pod"))(x)
 hier = sm(lambda v: hierarchical_psum(v, intra_axis="data",
                                       inter_axis="pod"))(x)
 assert jnp.allclose(flat, hier)
 m2 = jax.make_mesh((8,), ("d",))
-sm2 = lambda fn: jax.shard_map(fn, mesh=m2, in_specs=P("d"),
-                               out_specs=P("d"), check_vma=False)
+sm2 = lambda fn: shard_map_compat(fn, mesh=m2, in_specs=P("d"),
+                                  out_specs=P("d"))
 y = jnp.arange(128, dtype=jnp.float32).reshape(16, 8)
 r = sm2(lambda v: ring_all_reduce(v, "d"))(y)
 p = sm2(lambda v: jax.lax.psum(v, "d"))(y)

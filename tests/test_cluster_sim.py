@@ -1,11 +1,19 @@
 """Cluster simulator: paper-calibration assertions + invariant property
-tests (deliverable c: hypothesis on system invariants)."""
+tests (deliverable c: hypothesis on system invariants).
+
+Exercises the legacy ``repro.core.cluster_sim`` import path on purpose —
+it is the compatibility shim over ``repro.sched`` (the policy-level
+tests live in tests/test_sched.py)."""
 import math
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # clean env: deterministic fallback
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.core.cluster_sim import (JobState, Simulation, obs1_job_states,
                                     obs2_job_sizes, obs3_utilization,

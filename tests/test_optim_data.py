@@ -1,10 +1,14 @@
 """Optimizer math, LR schedule, gradient compression, data pipeline."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # clean env: deterministic fallback
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.core.config import OptimizerConfig
 from repro.optim import (adamw_init, adamw_update, compress_grads,

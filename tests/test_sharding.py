@@ -1,12 +1,16 @@
 """Logical-axis sharding rules: fallbacks, exclusivity, and hypothesis
 property tests over random tensor shapes (deliverable c: property tests on
 system invariants)."""
-import hypothesis.strategies as st
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings
 from jax.sharding import PartitionSpec as P
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # clean env: deterministic fallback
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.parallel.sharding import DEFAULT_RULES, logical_to_spec
 
