@@ -22,6 +22,7 @@ SUITES = [
     ("reference", "benchmarks.reference_compare"),  # Table 12
     ("workload", "benchmarks.workload"),            # Figures 3-7, T13-14
     ("scheduler", "benchmarks.scheduler_study"),    # §8.5 (beyond paper)
+    ("serving", "benchmarks.serving_load"),         # serving SLOs (§7 mix)
     ("roofline", "benchmarks.roofline_table"),      # §Roofline
 ]
 

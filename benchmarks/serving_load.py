@@ -1,0 +1,176 @@
+"""Open-loop serving load benchmark (Poisson / trace-driven arrivals).
+
+Reproduces the load-generator + latency-percentile methodology of
+managed-inference benchmarking (TTFT / inter-token latency / throughput
+under concurrent load) against ``repro.serving.Engine``, with an arrival
+mix echoing the paper's §7 workload dynamics: request traffic dominated
+by many SMALL interactive jobs with a heavy tail of long prompts.
+
+Open loop: arrivals follow the trace's wall-clock schedule regardless of
+engine backlog, so queueing shows up in TTFT rather than being hidden by
+closed-loop backpressure.  Each policy knob (slot count, prefill
+chunking) is swept and reported as one CSV row:
+
+    serving/slots4_chunk16,<us_per_output_token>,p50_ttft_ms=..;...
+
+    PYTHONPATH=src python -m benchmarks.serving_load \
+        --arch gemma-2b --requests 32 --rate 20 --slots 2,4 --chunk 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+@dataclasses.dataclass
+class TraceEntry:
+    arrival_s: float
+    prompt: np.ndarray
+    max_new: int
+
+
+def make_trace(n: int, rate: float, *, prefill_len: int, vocab: int,
+               max_new_cap: int, seed: int,
+               short_frac: float = None) -> List[TraceEntry]:
+    """Poisson arrivals; small-job-dominated prompt/output length mix."""
+    from repro.serving.mix import SHORT_FRAC, sample_prompt_len
+
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.exponential(1.0 / rate, n))
+    out = []
+    for i in range(n):
+        S = sample_prompt_len(
+            rng, prefill_len,
+            SHORT_FRAC if short_frac is None else short_frac)
+        max_new = int(np.clip(rng.geometric(1 / 6), 1, max_new_cap))
+        out.append(TraceEntry(
+            arrival_s=float(t[i]),
+            prompt=rng.integers(2, vocab, S).astype(np.int32),
+            max_new=max_new))
+    return out
+
+
+def run_one(model, params, trace: List[TraceEntry], *, slots: int,
+            prefill_len: int, cache_len: int,
+            prefill_chunk: Optional[int], temperature: float = 0.7,
+            seed: int = 0) -> Dict:
+    """Drive one engine config through the trace; return summary metrics."""
+    from repro.serving import Engine, SamplingParams
+
+    from repro.core.telemetry import ServingTelemetry
+
+    engine = Engine(model, params, slots=slots, prefill_len=prefill_len,
+                    cache_len=cache_len, prefill_chunk=prefill_chunk)
+    # warm up every prefill bucket this trace will hit plus the decode
+    # step BEFORE starting the arrival clock — otherwise p99 TTFT and
+    # queue wait just measure XLA compile time, not queueing behaviour
+    buckets = {engine._bucket_len(min(len(e.prompt), prefill_len))
+               for e in trace}
+    rng = np.random.default_rng(seed)
+    for b in sorted(buckets):
+        engine.submit(rng.integers(2, 100, b).astype(np.int32),
+                      SamplingParams(temperature=0.5, max_new_tokens=2))
+    engine.run(max_ticks=10 * len(buckets) + 10)
+    engine.reap()
+    engine.telemetry = ServingTelemetry()
+
+    t0 = time.monotonic()
+    pending = list(trace)
+    i = 0
+    while pending or engine.queue or engine.pool.num_active:
+        now = time.monotonic() - t0
+        while pending and pending[0].arrival_s <= now:
+            e = pending.pop(0)
+            engine.submit(e.prompt, SamplingParams(
+                temperature=temperature, top_k=20, seed=seed + i,
+                max_new_tokens=e.max_new))
+            i += 1
+        if not engine.step() and pending:
+            # idle and the next arrival is in the future: wait it out
+            time.sleep(min(0.002, max(0.0, pending[0].arrival_s - now)))
+    elapsed = time.monotonic() - t0
+    s = engine.stats()
+    s["elapsed_s"] = elapsed
+    s["tok_per_s"] = s["output_tokens"] / max(elapsed, 1e-9)
+    s["req_per_s"] = s["finished"] / max(elapsed, 1e-9)
+    s["ticks"] = engine.ticks
+    return s
+
+
+def _derived(s: Dict) -> str:
+    keys = ("ttft_p50_ms", "ttft_p99_ms", "tpot_p50_ms", "tpot_p99_ms",
+            "queue_wait_p50_ms", "queue_wait_p99_ms")
+    parts = [f"{k}={s[k]:.1f}" for k in keys]
+    parts += [f"tok_per_s={s['tok_per_s']:.1f}",
+              f"req_per_s={s['req_per_s']:.2f}"]
+    return ";".join(parts)
+
+
+def sweep(arch: str, *, requests: int, rate: float, slots_list: List[int],
+          chunk_list: List[Optional[int]], prefill_len: int, cache_len: int,
+          max_new: int, seed: int) -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import reduced_config
+    from repro.models.model import build_model
+
+    cfg = reduced_config(arch)
+    model = build_model(cfg, remat="none")
+    params = model.init(jax.random.key(seed), dtype=jnp.float32)
+    trace = make_trace(requests, rate, prefill_len=prefill_len,
+                       vocab=cfg.vocab_size, max_new_cap=max_new, seed=seed)
+    rows = []
+    for slots in slots_list:
+        for chunk in chunk_list:
+            s = run_one(model, params, trace, slots=slots,
+                        prefill_len=prefill_len, cache_len=cache_len,
+                        prefill_chunk=chunk, seed=seed)
+            name = f"serving/slots{slots}" + (f"_chunk{chunk}" if chunk
+                                              else "")
+            us_per_tok = 1e6 * s["elapsed_s"] / max(s["output_tokens"], 1)
+            emit(name, us_per_tok, _derived(s))
+            s["name"] = name
+            rows.append(s)
+    return rows
+
+
+def run():
+    """Harness entry (benchmarks.run): small smoke sweep of the slot knob."""
+    sweep("gemma-2b", requests=8, rate=50.0, slots_list=[2, 4],
+          chunk_list=[16], prefill_len=32, cache_len=64, max_new=8, seed=0)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="open-loop serving load sweep")
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="mean arrival rate (req/s)")
+    ap.add_argument("--slots", default="2,4",
+                    help="comma-separated slot counts to sweep")
+    ap.add_argument("--chunk", default="16",
+                    help="comma-separated prefill chunk sizes (0 = exact)")
+    ap.add_argument("--prefill-len", type=int, default=64)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    slots_list = [int(x) for x in args.slots.split(",") if x]
+    chunk_list = [int(x) or None for x in args.chunk.split(",") if x]
+    print("name,us_per_call,derived")
+    sweep(args.arch, requests=args.requests, rate=args.rate,
+          slots_list=slots_list, chunk_list=chunk_list,
+          prefill_len=args.prefill_len, cache_len=args.cache_len,
+          max_new=args.max_new, seed=args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

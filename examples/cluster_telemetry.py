@@ -22,6 +22,29 @@ def bar(frac, width=40):
     return "#" * int(frac * width)
 
 
+def serving_stats(seed: int):
+    """Tiny live serving workload -> request-level telemetry (TTFT/TPOT)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import reduced_config
+    from repro.models.model import build_model
+    from repro.serving import Engine, SamplingParams
+
+    cfg = reduced_config("gemma-2b")
+    model = build_model(cfg, remat="none")
+    params = model.init(jax.random.key(seed))
+    engine = Engine(model, params, slots=2, prefill_len=16, cache_len=32)
+    rng = np.random.default_rng(seed)
+    for rid in range(6):
+        prompt = rng.integers(2, cfg.vocab_size, int(rng.integers(4, 16)))
+        engine.submit(prompt.astype(np.int32),
+                      SamplingParams(temperature=0.7, top_k=20, seed=rid,
+                                     max_new_tokens=6))
+    engine.run(max_ticks=200)
+    return engine.stats()
+
+
 def main():
     from repro.sched import POLICIES, cross_pod_stats
 
@@ -31,6 +54,10 @@ def main():
                     help="legacy alias for --policy preempt")
     ap.add_argument("--policy", choices=sorted(POLICIES), default=None,
                     help="scheduler policy (default fifo)")
+    ap.add_argument("--serving", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="also run a tiny serving-engine workload and show "
+                         "request-level stats (--no-serving to skip)")
     args = ap.parse_args()
     if args.preemption and args.policy not in (None, "preempt"):
         ap.error("--preemption conflicts with --policy "
@@ -74,6 +101,19 @@ def main():
           f"({cp['cross_pod_frac']*100:.1f}% of {cp['collective_gb']:.0f} GB; "
           f"{cp['cross_pod_jobs']}/{cp['multi_node_jobs']} multi-node jobs "
           f"span pods)")
+
+    if args.serving:
+        print("\n=== request-level serving telemetry "
+              "(repro.serving.Engine, live) ===")
+        s = serving_stats(args.seed)
+        print(f"  {s['finished']}/{s['requests']} requests finished, "
+              f"{s['output_tokens']} output tokens")
+        print(f"  TTFT  p50 {s['ttft_p50_ms']:8.1f} ms   "
+              f"p99 {s['ttft_p99_ms']:8.1f} ms")
+        print(f"  TPOT  p50 {s['tpot_p50_ms']:8.1f} ms   "
+              f"p99 {s['tpot_p99_ms']:8.1f} ms")
+        print(f"  queue p50 {s['queue_wait_p50_ms']:8.1f} ms   "
+              f"p99 {s['queue_wait_p99_ms']:8.1f} ms")
 
 
 if __name__ == "__main__":

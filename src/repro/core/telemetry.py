@@ -12,7 +12,7 @@ from __future__ import annotations
 import json
 import pathlib
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 from repro.core.config import CHIP, ModelConfig, ShapeConfig
 
@@ -60,6 +60,71 @@ class RunTelemetry:
             "mean_mfu": sum(mfus) / len(mfus),
             "low_util_fraction": low,
             "steps": len(self.records),
+        }
+
+    def close(self):
+        if self._fh:
+            self._fh.close()
+
+
+# ---------------------------------------------------------------------------
+def percentile(xs: List[float], q: float) -> float:
+    """Linear-interpolated percentile (q in [0, 100]); nan when empty."""
+    if not xs:
+        return float("nan")
+    import numpy as np
+    return float(np.percentile(xs, q))
+
+
+class ServingTelemetry:
+    """Request-level serving telemetry (the inference-side twin of
+    ``RunTelemetry``): one JSONL record per finished/cancelled request
+    with queue wait, TTFT, and TPOT, plus a percentile summary — the
+    signals the paper's small-interactive-job-dominated workload mix
+    (§7, Observation 2) turns into the serving SLOs a production
+    deployment watches.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = pathlib.Path(path) if path else None
+        self._fh = self.path.open("a") if self.path else None
+        self.records: List[Dict] = []
+
+    def record_request(self, result) -> Dict:
+        """Record a ``repro.serving.GenerationResult`` (duck-typed: needs
+        .rid, .state.value, .done_reason, .metrics.as_dict())."""
+        rec = {
+            "rid": result.rid,
+            "state": result.state.value,
+            "done_reason": result.done_reason,
+            "time": time.time(),
+            **result.metrics.as_dict(),
+        }
+        self.records.append(rec)
+        if self._fh:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+        return rec
+
+    def summary(self) -> Dict:
+        """p50/p99 TTFT / TPOT / queue wait (ms) over finished requests."""
+        fin = [r for r in self.records if r["state"] == "finished"]
+
+        def pick(key):
+            return [r[key] for r in fin if r.get(key) is not None]
+
+        ttft, tpot, qw = pick("ttft_s"), pick("tpot_s"), pick("queue_wait_s")
+        return {
+            "requests": len(self.records),
+            "finished": len(fin),
+            "cancelled": sum(r["state"] == "cancelled" for r in self.records),
+            "output_tokens": sum(r["output_tokens"] for r in self.records),
+            "ttft_p50_ms": percentile(ttft, 50) * 1e3,
+            "ttft_p99_ms": percentile(ttft, 99) * 1e3,
+            "tpot_p50_ms": percentile(tpot, 50) * 1e3,
+            "tpot_p99_ms": percentile(tpot, 99) * 1e3,
+            "queue_wait_p50_ms": percentile(qw, 50) * 1e3,
+            "queue_wait_p99_ms": percentile(qw, 99) * 1e3,
         }
 
     def close(self):

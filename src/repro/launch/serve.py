@@ -1,77 +1,108 @@
-"""Batched serving driver: continuous-batching style loop over prefill +
-decode steps with a shared KV/SSM cache.
+"""Serving CLI — a thin front-end over ``repro.serving.Engine``.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b \
-        --requests 8 --prefill-len 64 --max-new 32
+Submits a batch of synthetic requests with mixed prompt lengths (the
+paper's small-interactive-job-dominated mix, §7 Obs. 2) through the
+continuous-batching engine and prints per-request and aggregate serving
+metrics (queue wait / TTFT / TPOT).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b \
+        --requests 8 --slots 4 --max-new 32 --temperature 0.8 --top-k 40
+
+``--reduced`` is on by default; pass ``--no-reduced`` for the
+full-size published config.
 """
 from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
+from repro.core.telemetry import ServingTelemetry
 from repro.models.model import build_model
-from repro.serving.engine import make_decode_step, make_prefill_step
+from repro.serving import Engine, SamplingParams
+from repro.serving.mix import sample_prompt_len
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="gemma-2b",
+                    help="decoder-only arch (encoder-decoder/audio serving "
+                         "is not supported by Engine; use launch.dryrun)")
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced config (default; --no-reduced = full size)")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prefill-len", type=int, default=64)
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="bucket prompt lengths up to multiples of this "
+                         "(bounds prefill recompiles; global-attention archs)")
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are sampled")
+    ap.add_argument("--telemetry", default=None,
+                    help="JSONL path for per-request records")
+    return ap
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma-2b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prefill-len", type=int, default=64)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    args = build_parser().parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if cfg.family.value in ("encdec", "audio"):
+        raise SystemExit(
+            f"{cfg.name}: encoder-decoder/audio serving is not supported by "
+            "the Engine (needs src_embeds plumbing); use the launch.dryrun "
+            "serve cells instead")
     model = build_model(cfg, remat="none")
     params = model.init(jax.random.key(args.seed), dtype=jnp.float32)
 
-    B, S = args.requests, args.prefill_len
+    telemetry = ServingTelemetry(args.telemetry)
+    engine = Engine(model, params, slots=args.slots,
+                    prefill_len=args.prefill_len, cache_len=args.cache_len,
+                    prefill_chunk=args.prefill_chunk, telemetry=telemetry)
+
     rng = np.random.default_rng(args.seed)
-    prompt = jnp.asarray(rng.integers(2, cfg.vocab_size, (B, S)), jnp.int32)
+    on_token = None
+    if args.stream:
+        on_token = lambda rid, tok, last: print(
+            f"  [rid {rid}] {tok}{' <eos/len>' if last else ''}", flush=True)
 
-    prefill = jax.jit(make_prefill_step(model))
-    decode = jax.jit(make_decode_step(model))
+    for i in range(args.requests):
+        S = sample_prompt_len(rng, args.prefill_len)
+        prompt = rng.integers(2, cfg.vocab_size, S).astype(np.int32)
+        engine.submit(prompt, SamplingParams(
+            temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+            seed=args.seed + i, max_new_tokens=args.max_new), on_token=on_token)
 
-    batch = {"tokens": prompt}
-    if cfg.m_rope_sections is not None:
-        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-        batch["positions"] = jnp.broadcast_to(pos, (3, B, S))
-    if cfg.frontend_dim and cfg.family.value in ("encdec", "audio"):
-        batch["src_embeds"] = jnp.asarray(
-            rng.standard_normal((B, S, cfg.frontend_dim)), jnp.bfloat16)
+    results = engine.run(max_ticks=100_000)
 
-    t0 = time.time()
-    tok, cache = prefill(params, batch)
-    t_prefill = time.time() - t0
-
-    outs = [tok]
-    t0 = time.time()
-    for i in range(args.max_new - 1):
-        db = {"tokens": tok[:, None]}
-        if cfg.m_rope_sections is not None:
-            db["positions"] = jnp.broadcast_to(
-                cache["len"], (3, B, 1)).astype(jnp.int32)
-        tok, cache = decode(params, cache, db)
-        outs.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-
-    gen = jnp.stack(outs, axis=1)
-    tps = B * (args.max_new - 1) / max(t_decode, 1e-9)
-    print(f"prefill: {B}x{S} tokens in {t_prefill:.2f}s "
-          f"({B*S/max(t_prefill,1e-9):.0f} tok/s)")
-    print(f"decode:  {args.max_new-1} steps x {B} seqs in {t_decode:.2f}s "
-          f"({tps:.1f} tok/s)")
-    print(f"sample continuation[0]: {gen[0, :12].tolist()}")
-    assert not bool(jnp.isnan(gen).any())
+    print(f"{cfg.name}: {len(results)} requests, slots={args.slots}, "
+          f"ticks={engine.ticks}")
+    for rid in sorted(results):
+        r = results[rid]
+        m = r.metrics
+        print(f"  rid {rid}: prompt {m.prompt_tokens:3d} -> "
+              f"{m.output_tokens:3d} tok ({r.done_reason}); "
+              f"wait {1e3 * (m.queue_wait or 0):.0f} ms, "
+              f"ttft {1e3 * (m.ttft or 0):.0f} ms, "
+              f"tpot {1e3 * (m.tpot or 0):.1f} ms")
+    s = engine.stats()
+    print(f"aggregate: {s['output_tokens']} tokens; "
+          f"ttft p50/p99 {s['ttft_p50_ms']:.0f}/{s['ttft_p99_ms']:.0f} ms; "
+          f"tpot p50/p99 {s['tpot_p50_ms']:.1f}/{s['tpot_p99_ms']:.1f} ms; "
+          f"queue p50/p99 {s['queue_wait_p50_ms']:.0f}/"
+          f"{s['queue_wait_p99_ms']:.0f} ms")
+    telemetry.close()
     return 0
 
 

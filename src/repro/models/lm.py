@@ -157,6 +157,31 @@ def _ssm_block(p, x, cfg, cache=None, return_cache=False):
     return x + y, new_cache
 
 
+def _cache_write(kc, vc, pc, k_new, v_new, pos):
+    """Write the new KV at each row's (ring) position.
+
+    kc, vc: (B, T, K, hd); pc: (B, T); k_new, v_new: (B, 1, K, hd);
+    pos: scalar () for uniform batches — all rows share one column, and
+    the contiguous dynamic_update_slice lowers much leaner than a
+    scatter (the decode dry-run cells are memory-dominant) — or (B,)
+    per-row positions for slot-pool serving, where rows at different
+    sequence lengths land in different cache columns.  The pooled cache
+    stays shape-static either way."""
+    B, T = pc.shape
+    slot = jnp.mod(pos.astype(jnp.int32), T)
+    if pos.ndim == 0:
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new, slot, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new, slot, 1)
+        pc = jax.lax.dynamic_update_slice_in_dim(
+            pc, jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32), slot, 1)
+        return kc, vc, pc
+    rows = jnp.arange(B)
+    kc = kc.at[rows, slot].set(k_new[:, 0])
+    vc = vc.at[rows, slot].set(v_new[:, 0])
+    pc = pc.at[rows, slot].set(pos.astype(jnp.int32))
+    return kc, vc, pc
+
+
 # ---------------------------------------------------------------------------
 class DecoderModel:
     """Functional wrapper: config + param defs + step functions."""
@@ -431,7 +456,15 @@ class DecoderModel:
                     cache["pos_glob"] = pos_full[gi]
 
         x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
-        logits = L.unembed(params["embed"], x[:, -1:, :], cfg)[:, 0]
+        if "length" in batch:
+            # right-padded prompts (bucketed prefill): read the logits of
+            # each row's last REAL token, not the trailing pad token
+            idx = jnp.clip(batch["length"].astype(jnp.int32) - 1, 0,
+                           x.shape[1] - 1)
+            last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        else:
+            last = x[:, -1:, :]
+        logits = L.unembed(params["embed"], last, cfg)[:, 0]
         return logits, cache
 
     def _hybrid_prefill(self, params, x, positions, cache, ssm_body):
@@ -482,17 +515,28 @@ class DecoderModel:
     def decode_step(self, params, batch, cache) -> Tuple[jax.Array, Dict]:
         """One-token decode. batch: {"tokens": (B, 1), ...}.
 
+        ``batch["pos_row"]`` ((B,) int32) requests PER-ROW cache writes
+        and positions, so co-batched sequences at different lengths
+        decode correctly (slot-pool serving; the caller supplies
+        matching ``batch["positions"]``).  Without it every row advances
+        at the pooled ``cache["len"]`` via the leaner contiguous-slice
+        cache write — exact for uniform-length batches, e.g. the
+        dry-run decode cells (which pass uniform ``positions`` only).
+
         Returns (logits (B, V), new_cache)."""
         cfg = self.cfg
         x = self._embed_inputs(params, batch)
         B = x.shape[0]
         cur = cache["len"]
+        pos_row = batch.get("pos_row", cur)
         if cfg.m_rope_sections is not None:
             positions = batch.get(
                 "positions",
                 jnp.broadcast_to(cur, (3, B, 1)).astype(jnp.int32))
         else:
-            positions = jnp.broadcast_to(cur, (B, 1)).astype(jnp.int32)
+            positions = batch.get(
+                "positions",
+                jnp.broadcast_to(cur, (B, 1)).astype(jnp.int32))
         new_cache = dict(cache)
         new_cache["len"] = cur + 1
 
@@ -507,22 +551,16 @@ class DecoderModel:
             new_cache["ssm_conv"], new_cache["ssm_state"] = convs, states
         elif cfg.family == Family.HYBRID:
             x, new_cache = self._hybrid_decode(params, x, positions, cache,
-                                               new_cache)
+                                               new_cache, pos_row)
         else:
             def make_body(win_static=None):
                 def body(h, xs):
                     p_l, kc, vc, pc, win = xs
-                    slot = jnp.mod(cur, kc.shape[1])
                     hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
                     k_new, v_new = L.project_kv(p_l["attn"], hln, cfg,
                                                 positions)
-                    kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new,
-                                                             slot, 1)
-                    vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new,
-                                                             slot, 1)
-                    pc = jax.lax.dynamic_update_slice_in_dim(
-                        pc, jnp.broadcast_to(cur, (B, 1)).astype(jnp.int32),
-                        slot, 1)
+                    kc, vc, pc = _cache_write(kc, vc, pc, k_new, v_new,
+                                              pos_row)
                     hn, _, _ = _attn_mlp_block(
                         p_l, h, cfg, positions=positions, window=win,
                         cache_kv=(kc, vc, pc), moe_impl=self.moe_impl)
@@ -552,14 +590,14 @@ class DecoderModel:
                 new_cache["pos_loc"] = ps
             else:
                 x, new_cache = self._local_global_decode(
-                    params, x, positions, cache, new_cache, wl, cur, B)
+                    params, x, positions, cache, new_cache, wl, pos_row, B)
 
         x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
         logits = L.unembed(params["embed"], x, cfg)[:, 0]
         return logits, new_cache
 
     def _local_global_decode(self, params, x, positions, cache, new_cache,
-                             wl, cur, B):
+                             wl, pos_row, B):
         """Decode for local:global patterns (gemma3): local layers read/write
         ring buffers of `window` slots, global layers full caches.  Scans
         run per period group (locals are contiguous within a group)."""
@@ -573,26 +611,18 @@ class DecoderModel:
 
         def loc_body(h, xs):
             p_l, kc, vc, pc = xs
-            slot = jnp.mod(cur, kc.shape[1])
             hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
             k_new, v_new = L.project_kv(p_l["attn"], hln, cfg, positions)
-            kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new, slot, 1)
-            vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new, slot, 1)
-            pc = jax.lax.dynamic_update_slice_in_dim(
-                pc, jnp.broadcast_to(cur, (B, 1)).astype(jnp.int32), slot, 1)
+            kc, vc, pc = _cache_write(kc, vc, pc, k_new, v_new, pos_row)
             hn, _, _ = _attn_mlp_block(
                 p_l, h, cfg, positions=positions, window=cfg.sliding_window,
                 cache_kv=(kc, vc, pc), moe_impl=self.moe_impl)
             return hn, (kc, vc, pc)
 
         def glob_apply(h, p_l, kc, vc, pc):
-            slot = jnp.mod(cur, kc.shape[1])
             hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
             k_new, v_new = L.project_kv(p_l["attn"], hln, cfg, positions)
-            kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new, slot, 1)
-            vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new, slot, 1)
-            pc = jax.lax.dynamic_update_slice_in_dim(
-                pc, jnp.broadcast_to(cur, (B, 1)).astype(jnp.int32), slot, 1)
+            kc, vc, pc = _cache_write(kc, vc, pc, k_new, v_new, pos_row)
             hn, _, _ = _attn_mlp_block(
                 p_l, h, cfg, positions=positions, window=None,
                 cache_kv=(kc, vc, pc), moe_impl=self.moe_impl)
@@ -631,13 +661,10 @@ class DecoderModel:
         new_cache["pos_glob"] = jnp.stack(pgs)
         return x, new_cache
 
-    def _hybrid_decode(self, params, x, positions, cache, new_cache):
+    def _hybrid_decode(self, params, x, positions, cache, new_cache, pos_row):
         cfg = self.cfg
         ae = cfg.attn_every
         ngroups, tail = divmod(cfg.num_layers, ae)
-        B = x.shape[0]
-        cur = cache["len"]
-        slot = jnp.mod(cur, cache["shared_k"].shape[2])
         shared = params["shared"]
 
         def ssm_body(h, xs):
@@ -648,10 +675,7 @@ class DecoderModel:
         def shared_apply(h, kc, vc, pc):
             hln = L.rms_norm(h, shared["ln1"]["scale"], cfg.rms_eps)
             k_new, v_new = L.project_kv(shared["attn"], hln, cfg, positions)
-            kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new, slot, 1)
-            vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new, slot, 1)
-            pc = jax.lax.dynamic_update_slice_in_dim(
-                pc, jnp.broadcast_to(cur, (B, 1)).astype(jnp.int32), slot, 1)
+            kc, vc, pc = _cache_write(kc, vc, pc, k_new, v_new, pos_row)
             hn, _, _ = _attn_mlp_block(shared, h, cfg, positions=positions,
                                        window=None, cache_kv=(kc, vc, pc))
             return hn, kc, vc, pc

@@ -1,2 +1,28 @@
-from repro.serving.engine import make_prefill_step, make_decode_step
+"""Serving subsystem: request-lifecycle inference engine.
+
+Public API:
+  Engine            continuous-batching facade (submit / step / run / cancel)
+  SamplingParams    per-request greedy / temperature / top-k / top-p config
+  InferenceRequest  request record with lifecycle state + metrics
+  GenerationResult  per-request output (tokens, done reason, TTFT/TPOT)
+  SlotPool          fixed-slot cache pool with true per-slot lengths
+  make_generate_step  the jitted decode+sample step factory
+
+Deprecated (kept as shims): ContinuousBatcher, Request,
+make_prefill_step, make_decode_step.
+"""
+from repro.serving.engine import (Engine, make_decode_step,
+                                  make_generate_step, make_prefill_step)
+from repro.serving.request import (GenerationResult, InferenceRequest,
+                                   RequestMetrics, RequestState)
+from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
+from repro.serving.slots import SlotPool
 from repro.serving.batcher import ContinuousBatcher, Request
+
+__all__ = [
+    "Engine", "SamplingParams", "GREEDY", "sample_tokens",
+    "InferenceRequest", "GenerationResult", "RequestMetrics", "RequestState",
+    "SlotPool", "make_generate_step",
+    # deprecated shims
+    "ContinuousBatcher", "Request", "make_prefill_step", "make_decode_step",
+]

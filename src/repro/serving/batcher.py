@@ -1,29 +1,39 @@
-"""Continuous-batching serving driver.
+"""DEPRECATED — ``ContinuousBatcher`` is a compatibility shim.
 
-Production serving shape (vLLM-style, TPU-idiomatic static shapes): a
-fixed pool of B cache slots; requests join by prefilling into a free
-slot (slot-wise cache insertion), every decode step advances ALL active
-slots at once, finished sequences (EOS or max-new) free their slot for
-the next queued request.  Static shapes throughout — the jit signature
-never changes.
+The batched serving driver was redesigned into the request-lifecycle
+``repro.serving.Engine`` (sampling params, per-slot correctness via
+``SlotPool``, streaming callbacks, serving telemetry).  This module
+keeps the old import path and driver surface working::
 
-The per-slot cache trick: prefill runs at batch=1 and its cache is
-scattered into slot ``i`` of the pooled cache along the batch axis.
+    from repro.serving.batcher import ContinuousBatcher, Request
+
+    b = ContinuousBatcher(model, params, slots=4)
+    b.submit(Request(rid=0, prompt=toks, max_new=16))
+    done = b.run()          # {rid: [token, ...]}
+
+Migration: ``Engine(model, params, slots=...)`` +
+``engine.submit(prompt, SamplingParams(max_new_tokens=..., eos_token=...))``.
+The old pooled-cache behaviour of advancing every slot at
+``slot_len.max()`` (wrong RoPE positions / attention masks for any slot
+shorter than the longest) is gone — the shim inherits the fixed
+per-slot semantics.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.engine import make_decode_step, make_prefill_step
+from repro.serving.engine import Engine
+from repro.serving.request import InferenceRequest  # noqa: F401 (re-export)
+from repro.serving.sampling import SamplingParams
 
 
 @dataclasses.dataclass
 class Request:
+    """Legacy request record (pre-``InferenceRequest``)."""
     rid: int
     prompt: np.ndarray              # (S,) int32
     max_new: int = 16
@@ -32,111 +42,53 @@ class Request:
 
 
 class ContinuousBatcher:
+    """Deprecated wrapper over ``repro.serving.Engine``."""
+
     def __init__(self, model, params, *, slots: int = 4,
                  prefill_len: int = 64, cache_len: int = 256):
-        self.model = model
-        self.params = params
-        self.slots = slots
-        self.prefill_len = prefill_len
-        self.cache_len = cache_len
-        self.cfg = model.cfg
-        self._prefill = jax.jit(make_prefill_step(model))
-        self._decode = jax.jit(make_decode_step(model))
-        self.cache = model.init_cache(slots, cache_len)
-        # per-slot state (host side)
-        self.active: List[Optional[Request]] = [None] * slots
-        self.slot_len = np.zeros(slots, np.int64)
-        self.queue: List[Request] = []
-        self.done: Dict[int, List[int]] = {}
-        self.last_tok = jnp.zeros((slots,), jnp.int32)
+        warnings.warn(
+            "ContinuousBatcher is deprecated; use repro.serving.Engine "
+            "(request lifecycle, sampling, per-slot metrics)",
+            DeprecationWarning, stacklevel=2)
+        self.engine = Engine(model, params, slots=slots,
+                             prefill_len=prefill_len, cache_len=cache_len)
+        self._reqs: Dict[int, Request] = {}
 
-    # ------------------------------------------------------------------
+    # -- legacy surface ----------------------------------------------------
     def submit(self, req: Request):
         req.generated = []
-        self.queue.append(req)
+        self._reqs[req.rid] = req
+        self.engine.submit(
+            np.asarray(req.prompt, np.int32),
+            SamplingParams(max_new_tokens=req.max_new, eos_token=req.eos),
+            rid=req.rid,
+            on_token=lambda rid, tok, last, r=req: r.generated.append(tok))
 
-    def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.active) if r is None]
-
-    def _join(self, slot: int, req: Request):
-        """Prefill the request at batch=1 and scatter into the pool."""
-        S = min(len(req.prompt), self.prefill_len)
-        toks = jnp.asarray(req.prompt[:S], jnp.int32)[None]
-        batch = {"tokens": toks}
-        if self.cfg.m_rope_sections is not None:
-            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (1, S))
-            batch["positions"] = jnp.broadcast_to(pos, (3, 1, S))
-        tok, cache1 = self.model.prefill(self.params, batch)
-        tok = jnp.argmax(tok, -1).astype(jnp.int32) \
-            if tok.ndim > 1 else tok
-        # scatter each cache leaf's batch row into the pooled cache
-        def scatter(pool, one):
-            if pool.ndim == 0 or one is None:
-                return pool
-            # leaves are (L, B, T, ...) or (L, B, ...); batch axis = 1
-            if pool.ndim >= 2 and pool.shape[1] == self.slots:
-                row = one[:, 0]
-                if pool.ndim >= 3 and one.shape[2] != pool.shape[2]:
-                    # prefill cache is length S; pad/copy into pool length
-                    pad = pool.shape[2] - one.shape[2]
-                    row = jnp.pad(one[:, 0], [(0, 0), (0, pad)]
-                                  + [(0, 0)] * (one.ndim - 3),
-                                  constant_values=(-1 if one.dtype ==
-                                                   jnp.int32 else 0))
-                return pool.at[:, slot].set(row.astype(pool.dtype))
-            return pool
-        new_cache = {}
-        for k in self.cache:
-            if k == "len":
-                new_cache[k] = self.cache[k]
-                continue
-            new_cache[k] = scatter(self.cache[k], cache1.get(k))
-        self.cache = new_cache
-        self.active[slot] = req
-        self.slot_len[slot] = S
-        self.last_tok = self.last_tok.at[slot].set(
-            tok[0] if tok.ndim else tok)
-        req.generated.append(int(self.last_tok[slot]))
-
-    def _evict(self, slot: int):
-        req = self.active[slot]
-        self.done[req.rid] = req.generated
-        self.active[slot] = None
-        self.slot_len[slot] = 0
-
-    # ------------------------------------------------------------------
-    def step(self):
-        """One scheduler tick: join waiting requests, one decode step."""
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            self._join(slot, self.queue.pop(0))
-        if all(r is None for r in self.active):
-            return False
-        # pooled cache len: slots advance together; per-slot validity is
-        # tracked host-side (a production impl uses per-slot lengths via
-        # the pos arrays, which mask invalid history automatically)
-        self.cache["len"] = jnp.asarray(int(self.slot_len.max()), jnp.int32)
-        db = {"tokens": self.last_tok[:, None]}
-        if self.cfg.m_rope_sections is not None:
-            db["positions"] = jnp.broadcast_to(
-                self.cache["len"], (3, self.slots, 1)).astype(jnp.int32)
-        tok, self.cache = self._decode(self.params, self.cache, db)
-        self.last_tok = tok
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
-            t = int(tok[slot])
-            req.generated.append(t)
-            self.slot_len[slot] += 1
-            if t == req.eos or len(req.generated) >= req.max_new:
-                self._evict(slot)
-        return True
+    def step(self) -> bool:
+        return self.engine.step()
 
     def run(self, max_ticks: int = 1000) -> Dict[int, List[int]]:
-        ticks = 0
-        while (self.queue or any(r is not None for r in self.active)) \
-                and ticks < max_ticks:
-            self.step()
-            ticks += 1
+        self.engine.run(max_ticks)
         return self.done
+
+    @property
+    def done(self) -> Dict[int, List[int]]:
+        return {rid: list(res.tokens)
+                for rid, res in self.engine.finished.items()}
+
+    @property
+    def queue(self) -> List:
+        return self.engine.queue
+
+    @property
+    def active(self) -> List[Optional[Request]]:
+        return [None if r is None else self._reqs.get(r.rid)
+                for r in self.engine._slot_req]
+
+    @property
+    def slot_len(self) -> np.ndarray:
+        return self.engine.pool.lengths
+
+    @property
+    def cache(self):
+        return self.engine.cache

@@ -1,23 +1,80 @@
-"""Serving-step factories.
+"""Request-lifecycle inference engine (continuous batching, slot pool).
 
-``prefill_step``  — full-sequence forward that builds the KV/SSM cache and
-                    emits the first generated token.
-``decode_step``   — one token for every sequence in the batch against an
-                    existing cache (the ``decode_32k`` / ``long_500k``
-                    dry-run cells lower exactly this).
+``Engine`` is the serving facade: submit ``InferenceRequest``s (QUEUED),
+they join a fixed pool of cache slots via prefill (PREFILL), decode one
+token per tick for every active slot (DECODE), and finish on EOS /
+max_new_tokens (FINISHED) or ``cancel`` (CANCELLED).  Streaming token
+callbacks fire as tokens are sampled; per-request queue-wait / TTFT /
+TPOT land in a ``repro.core.telemetry.ServingTelemetry``.
 
-Sampling is greedy (argmax) — batched serving driver lives in
-``repro.serving.batcher``.
+Compilation discipline: the decode hot path is ONE jitted
+``generate_step`` whose signature is all-array — tokens, per-slot
+positions, and the packed per-slot sampling params (temperature / top-k
+/ top-p / seed / step).  Changing a request's sampling config therefore
+never retriggers compilation.  Prefill compiles once per prompt-length
+bucket (``prefill_chunk`` rounds lengths up; pure-global-attention archs
+only — ring buffers and SSM state cannot mask pad tokens).
+
+Legacy API: ``make_prefill_step`` / ``make_decode_step`` are the
+original greedy step factories, kept as deprecated shims (the dry-run
+cells still lower them); ``repro.serving.batcher.ContinuousBatcher``
+wraps ``Engine`` behind the old driver interface.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import time
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import Family
+from repro.core.telemetry import ServingTelemetry
+from repro.models.lm import window_layout
+from repro.serving.request import (GenerationResult, InferenceRequest,
+                                   RequestState, TokenCallback)
+from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
+from repro.serving.slots import SlotPool
+
+
+def make_generate_step(model):
+    """One decode tick for every slot + per-slot sampling, in one jit.
+
+    All per-slot state enters as arrays (B,):
+      tokens      last sampled token per slot
+      positions   true per-slot sequence length (the row's next write
+                  position — fixes the pooled ``slot_len.max()`` bug)
+      seeds/steps per-request PRNG stream (fold_in(PRNGKey(seed), step))
+      temperature/top_k/top_p   sampling filters (0 temp = greedy)
+    """
+    cfg = model.cfg
+
+    def generate_step(params, cache, tokens, positions, seeds, steps,
+                      temperature, top_k, top_p):
+        B = tokens.shape[0]
+        if cfg.m_rope_sections is not None:
+            pos = jnp.broadcast_to(positions[None, :, None], (3, B, 1))
+        else:
+            pos = positions[:, None]
+        batch = {"tokens": tokens[:, None],
+                 "positions": pos.astype(jnp.int32),
+                 "pos_row": positions.astype(jnp.int32)}
+        logits, new_cache = model.decode_step(params, batch, cache)
+        next_tok = sample_tokens(logits, seeds, steps, temperature,
+                                 top_k, top_p)
+        return next_tok, new_cache
+
+    return generate_step
 
 
 def make_prefill_step(model):
+    """Deprecated: greedy prefill step (use ``Engine`` / ``model.prefill``).
+
+    Kept for the dry-run cells and existing callers; returns
+    (argmax token (B,), cache) — the logits-based API lives on
+    ``model.prefill`` and ``Engine``."""
     def prefill_step(params, batch) -> Tuple[jax.Array, Dict]:
         logits, cache = model.prefill(params, batch)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -26,8 +83,280 @@ def make_prefill_step(model):
 
 
 def make_decode_step(model):
+    """Deprecated: greedy decode step (use ``Engine`` / ``generate_step``)."""
     def decode_step(params, cache, batch) -> Tuple[jax.Array, Dict]:
         logits, new_cache = model.decode_step(params, batch, cache)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, new_cache
     return decode_step
+
+
+class Engine:
+    """Continuous-batching inference engine over a fixed slot pool."""
+
+    def __init__(self, model, params, *, slots: int = 4,
+                 prefill_len: int = 64, cache_len: int = 256,
+                 prefill_chunk: Optional[int] = None,
+                 telemetry: Optional[ServingTelemetry] = None,
+                 clock=time.monotonic):
+        cfg = model.cfg
+        if cfg.family in (Family.ENCDEC, Family.AUDIO):
+            raise NotImplementedError(
+                "Engine serves decoder-only families; encoder-decoder "
+                "serving needs src_embeds plumbing (use launch.dryrun cells)")
+        if prefill_len > cache_len:
+            raise ValueError(f"prefill_len {prefill_len} exceeds "
+                             f"cache_len {cache_len}")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.prefill_len = prefill_len
+        self.cache_len = cache_len
+        self.clock = clock
+        self.telemetry = telemetry if telemetry is not None \
+            else ServingTelemetry()
+        # Bucketed (right-padded) prefill is only sound where cache
+        # positions fully encode validity: pure-global attention.  Ring
+        # buffers would retain pads over real keys; SSM state integrates
+        # pad tokens into the recurrence.
+        can_pad = (cfg.uses_attention
+                   and cfg.family not in (Family.SSM, Family.HYBRID)
+                   and window_layout(cfg, cache_len) is None)
+        if prefill_chunk and not can_pad:
+            warnings.warn(
+                f"prefill_chunk={prefill_chunk} ignored for {cfg.name}: "
+                "bucketed prefill needs pure-global attention (ring "
+                "buffers / SSM state cannot mask pad tokens)",
+                UserWarning, stacklevel=2)
+        self.prefill_chunk = prefill_chunk if can_pad else None
+
+        self._prefill = jax.jit(model.prefill)
+        self._generate = jax.jit(make_generate_step(model))
+        self._sample1 = jax.jit(sample_tokens)
+
+        self.cache = model.init_cache(slots, cache_len)
+        self.pool = SlotPool(slots)
+        self.queue: List[InferenceRequest] = []
+        self.requests: Dict[int, InferenceRequest] = {}
+        self.finished: Dict[int, GenerationResult] = {}
+        self._slot_req: List[Optional[InferenceRequest]] = [None] * slots
+        self.last_tok = np.zeros(slots, np.int32)
+        self._temp = np.zeros(slots, np.float32)
+        self._top_k = np.zeros(slots, np.int32)
+        self._top_p = np.ones(slots, np.float32)
+        self._seeds = np.zeros(slots, np.uint32)
+        self._steps = np.zeros(slots, np.int32)
+        self._next_rid = 0
+        self.ticks = 0
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, prompt: Union[np.ndarray, Sequence[int],
+                                   InferenceRequest],
+               sampling: Optional[SamplingParams] = None, *,
+               rid: Optional[int] = None,
+               on_token: Optional[TokenCallback] = None) -> int:
+        """Enqueue a request (QUEUED). Returns its rid."""
+        if isinstance(prompt, InferenceRequest):
+            req = prompt
+        else:
+            arr = np.asarray(prompt, np.int32).reshape(-1)
+            if arr.size == 0:
+                raise ValueError("empty prompt")
+            req = InferenceRequest(
+                rid=self._next_rid if rid is None else rid,
+                prompt=arr, sampling=sampling or GREEDY, on_token=on_token)
+        if req.rid in self.requests:
+            raise ValueError(f"duplicate rid {req.rid}")
+        if len(req.prompt) > self.prefill_len:
+            warnings.warn(
+                f"rid {req.rid}: prompt ({len(req.prompt)} tokens) exceeds "
+                f"prefill_len ({self.prefill_len}); only the first "
+                f"{self.prefill_len} tokens will be prefilled",
+                UserWarning, stacklevel=2)
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        req.state = RequestState.QUEUED
+        req.metrics.t_submit = self.clock()
+        req.metrics.prompt_tokens = int(len(req.prompt))
+        self.requests[req.rid] = req
+        self.queue.append(req)
+        return req.rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or running request. Returns True if it was live."""
+        req = self.requests.get(rid)
+        if req is None or req.state.is_terminal:
+            return False
+        if req.state == RequestState.QUEUED:
+            self.queue.remove(req)
+        else:
+            for slot, r in enumerate(self._slot_req):
+                if r is req:
+                    self._release(slot)
+                    break
+        self._finalize(req, RequestState.CANCELLED)
+        return True
+
+    # -- lifecycle internals ----------------------------------------------
+    def _bucket_len(self, S: int) -> int:
+        if self.prefill_chunk:
+            c = self.prefill_chunk
+            return min(self.prefill_len, -(-S // c) * c)
+        return S
+
+    def _join(self, slot: int, req: InferenceRequest):
+        """Prefill at batch=1, sample the first token, scatter into slot."""
+        req.state = RequestState.PREFILL
+        req.metrics.t_prefill_start = self.clock()
+        S = int(min(len(req.prompt), self.prefill_len))
+        Sp = self._bucket_len(S)
+        toks = np.zeros(Sp, np.int32)
+        toks[:S] = req.prompt[:S]
+        pos = np.arange(Sp, dtype=np.int32)
+        pos[S:] = -1                      # pads: masked keys, no-op RoPE
+        batch: Dict[str, Any] = {"tokens": jnp.asarray(toks)[None]}
+        if self.cfg.m_rope_sections is not None:
+            batch["positions"] = jnp.broadcast_to(
+                jnp.asarray(pos)[None, None], (3, 1, Sp))
+        elif Sp != S:
+            batch["positions"] = jnp.asarray(pos)[None]
+        if Sp != S:
+            batch["length"] = jnp.asarray([S], jnp.int32)
+        logits, cache1 = self._prefill(self.params, batch)
+        sp = req.sampling
+        first = self._sample1(
+            logits,
+            jnp.asarray([sp.seed & 0xFFFFFFFF], jnp.uint32),
+            jnp.asarray([0], jnp.int32),
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.top_p], jnp.float32))
+        self.cache = self.pool.scatter_prefill(self.cache, cache1, slot)
+        self.pool.acquire(slot, req.rid, S)
+        self._slot_req[slot] = req
+        tok = int(first[0])
+        self.last_tok[slot] = tok
+        self._temp[slot] = sp.temperature
+        self._top_k[slot] = sp.top_k
+        self._top_p[slot] = sp.top_p
+        self._seeds[slot] = np.uint32(sp.seed & 0xFFFFFFFF)
+        self._steps[slot] = 1
+        req.state = RequestState.DECODE
+        req.metrics.t_first_token = self.clock()
+        last = self._is_last(req, tok)
+        req.emit(tok, last)
+        # the callback may have cancelled this request (reentrant
+        # cancel): only retire the slot if it still holds it
+        if last and self._slot_req[slot] is req:
+            self._retire(slot)
+
+    def _is_last(self, req: InferenceRequest, tok: int) -> bool:
+        sp = req.sampling
+        n_after = len(req.generated) + 1
+        return (sp.eos_token is not None and tok == sp.eos_token) \
+            or n_after >= sp.max_new_tokens
+
+    def _release(self, slot: int):
+        self.pool.release(slot)
+        self._slot_req[slot] = None
+        self._temp[slot] = 0.0
+        self._steps[slot] = 0
+
+    def _retire(self, slot: int):
+        req = self._slot_req[slot]
+        self._release(slot)
+        self._finalize(req, RequestState.FINISHED)
+
+    def _finalize(self, req: InferenceRequest,
+                  state: RequestState) -> GenerationResult:
+        req.state = state
+        req.metrics.t_finish = self.clock()
+        res = GenerationResult(rid=req.rid, tokens=list(req.generated),
+                               state=state, done_reason=req.done_reason,
+                               metrics=req.metrics)
+        self.finished[req.rid] = res
+        self.telemetry.record_request(res)
+        return res
+
+    # -- scheduling tick ---------------------------------------------------
+    def step(self) -> bool:
+        """One tick: admit queued requests into free slots, decode once.
+
+        Returns False when there is nothing to do."""
+        admitted = 0
+        while self.queue:
+            # re-list free slots each join: a request whose first token
+            # already finishes it (eos / max_new=1) frees its slot inside
+            # _join, and the next queued request must be able to take it
+            free = self.pool.free_slots()
+            if not free:
+                break
+            self._join(free[0], self.queue.pop(0))
+            admitted += 1
+        if self.pool.num_active == 0:
+            return admitted > 0
+        self.cache["len"] = jnp.asarray(int(self.pool.lengths.max()),
+                                        jnp.int32)
+        tok, self.cache = self._generate(
+            self.params, self.cache,
+            jnp.asarray(self.last_tok),
+            jnp.asarray(self.pool.positions()),
+            jnp.asarray(self._seeds), jnp.asarray(self._steps),
+            jnp.asarray(self._temp), jnp.asarray(self._top_k),
+            jnp.asarray(self._top_p))
+        tok_host = np.asarray(jax.block_until_ready(tok))
+        self.last_tok = tok_host.copy()
+        self.ticks += 1
+        for slot in range(self.slots):
+            # read live, not a snapshot: an on_token callback earlier in
+            # this loop may have cancel()ed a later slot's request
+            req = self._slot_req[slot]
+            if req is None or req.state.is_terminal:
+                continue
+            t = int(tok_host[slot])
+            self.pool.advance(slot)
+            self._steps[slot] += 1
+            last = self._is_last(req, t)
+            req.emit(t, last)
+            if last and self._slot_req[slot] is req:
+                self._retire(slot)
+        return True
+
+    def run(self, max_ticks: int = 1000) -> Dict[int, GenerationResult]:
+        """Drive ticks until idle (or max_ticks). Returns finished results."""
+        ticks = 0
+        while (self.queue or self.pool.num_active) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return dict(self.finished)
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 sampling: Optional[SamplingParams] = None,
+                 max_ticks: int = 10_000) -> List[GenerationResult]:
+        """Batch convenience: submit all, run to completion, return in order."""
+        rids = [self.submit(np.asarray(p, np.int32), sampling)
+                for p in prompts]
+        self.run(max_ticks)
+        missing = [r for r in rids if r not in self.finished]
+        if missing:
+            raise RuntimeError(
+                f"generate: {len(missing)} request(s) unfinished after "
+                f"{max_ticks} ticks (rids {missing[:5]}...); raise max_ticks")
+        return [self.finished[r] for r in rids]
+
+    def reap(self) -> Dict[int, GenerationResult]:
+        """Drain terminal results and their request records.
+
+        Long-lived engines call this periodically to bound memory:
+        ``finished``/``requests`` entries are dropped (telemetry records
+        stay — they back ``stats()`` and stream to JSONL when a path was
+        given)."""
+        out = dict(self.finished)
+        self.finished.clear()
+        for rid in out:
+            self.requests.pop(rid, None)
+        return out
+
+    def stats(self) -> Dict:
+        """Aggregate serving metrics (p50/p99 TTFT, TPOT, queue wait)."""
+        return self.telemetry.summary()

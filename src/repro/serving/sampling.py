@@ -1,0 +1,91 @@
+"""Sampling for the serving engine.
+
+``SamplingParams`` is the per-request knob set (greedy / temperature /
+top-k / top-p, seeded).  The engine packs the live slots' params into
+flat device arrays, so one jitted ``generate_step`` serves every
+sampling configuration — changing a request's temperature or seed never
+retriggers compilation (the jit signature is all-array).
+
+Per-request determinism: each request samples from
+``fold_in(PRNGKey(seed), step)`` where ``step`` is the request's own
+token counter — the sampled continuation is independent of which slot
+the request landed in and of its co-batched neighbours.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding configuration (vLLM-style).
+
+    temperature == 0 selects greedy argmax decoding; top_k == 0 and
+    top_p == 1.0 disable the respective filters.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    max_new_tokens: int = 16
+    eos_token: Optional[int] = 1
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+GREEDY = SamplingParams()
+
+
+def sample_tokens(logits: jax.Array, seeds: jax.Array, steps: jax.Array,
+                  temperature: jax.Array, top_k: jax.Array,
+                  top_p: jax.Array) -> jax.Array:
+    """Vectorized per-row sampling.  All filter args are (B,) arrays.
+
+    logits: (B, V) — returns (B,) int32 next tokens.  Rows with
+    temperature <= 0 take the argmax; otherwise top-k / top-p filters
+    reduce to per-row value thresholds on the sorted logits (one sort,
+    no gather-scatter round-trip), then a per-row-keyed categorical.
+    """
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = logits / t
+    sorted_desc = jnp.flip(jnp.sort(scaled, axis=-1), axis=-1)
+
+    # top-k: keep values >= the k-th largest (k == 0 disables)
+    k = jnp.where(top_k > 0, jnp.clip(top_k, 1, V), V).astype(jnp.int32)
+    kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
+    keep = scaled >= kth
+
+    # top-p (nucleus): keep tokens whose preceding cumulative probability
+    # is < top_p (the first token always survives)
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep_sorted = (cum - probs) < top_p[:, None]
+    pth = jnp.min(jnp.where(keep_sorted, sorted_desc, jnp.inf), axis=-1)
+    keep &= scaled >= pth[:, None]
+
+    masked = jnp.where(keep, scaled, -jnp.inf)
+
+    def one(seed, step, row):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        return jax.random.categorical(key, row)
+
+    sampled = jax.vmap(one)(seeds.astype(jnp.uint32),
+                            steps.astype(jnp.int32), masked)
+    return jnp.where(temperature <= 0, greedy,
+                     sampled.astype(jnp.int32))

@@ -1,0 +1,93 @@
+"""Fixed-size slot pool with true per-slot sequence lengths.
+
+The pooled cache keeps the jit signature static: every cache leaf has a
+batch axis of size ``slots`` and decode always advances all slots at
+once.  Correctness for mixed-length slots comes from three invariants
+this pool maintains:
+
+  * each slot's next write position is its OWN length (``lengths[i]``),
+    not the pool max — the engine feeds ``positions()`` into the decode
+    step, and the model scatters each row's new KV at its own index;
+  * cache position rows (``pos*`` leaves) use -1 for empty entries, so
+    attention masks other slots' history and recycled-slot leftovers
+    automatically;
+  * joining a request overwrites the slot's ENTIRE cache row (padded
+    with -1 positions past the prompt), so a recycled slot cannot leak
+    the previous occupant's KV into the new request's attention.
+
+This replaces the old ``ContinuousBatcher`` behaviour of advancing the
+pooled cache with ``slot_len.max()``, which mis-positioned (RoPE and
+mask) every slot shorter than the longest one.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class SlotPool:
+    def __init__(self, slots: int):
+        self.slots = slots
+        self.lengths = np.zeros(slots, np.int64)   # tokens held per slot
+        self.owner: List[Optional[int]] = [None] * slots  # rid per slot
+
+    # -- bookkeeping -------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.owner) if r is None]
+
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self.owner)
+
+    def acquire(self, slot: int, rid: int, prompt_len: int):
+        assert self.owner[slot] is None, (slot, self.owner[slot])
+        self.owner[slot] = rid
+        self.lengths[slot] = prompt_len
+
+    def release(self, slot: int):
+        self.owner[slot] = None
+        self.lengths[slot] = 0
+
+    def advance(self, slot: int):
+        self.lengths[slot] += 1
+
+    def positions(self) -> np.ndarray:
+        """Per-slot next decode position (== current true length)."""
+        return self.lengths.astype(np.int32).copy()
+
+    def active_mask(self) -> np.ndarray:
+        return np.asarray([r is not None for r in self.owner])
+
+    # -- cache surgery -----------------------------------------------------
+    def scatter_prefill(self, pool_cache: Dict, cache1: Dict,
+                        slot: int) -> Dict:
+        """Write a batch=1 prefill cache into slot ``slot`` of the pool.
+
+        Every leaf except the scalar ``len`` has batch axis 1; the whole
+        row is overwritten.  Sequence axes shorter than the pool's are
+        right-padded — positions with -1 (empty marker), data with 0.
+        """
+        out = {}
+        for key, pool in pool_cache.items():
+            if key == "len":
+                out[key] = pool
+                continue
+            one = cache1.get(key)
+            if one is None:                       # leaf absent from prefill
+                out[key] = pool
+                continue
+            row = one[:, 0]
+            if one.ndim >= 3 and one.shape[2] != pool.shape[2]:
+                pad = pool.shape[2] - one.shape[2]
+                if pad < 0:
+                    raise ValueError(
+                        f"prefill cache leaf {key!r} longer than pool "
+                        f"({one.shape[2]} > {pool.shape[2]}); raise cache_len")
+                fill = -1 if jnp.issubdtype(one.dtype, jnp.integer) else 0
+                row = jnp.pad(row, [(0, 0), (0, pad)]
+                              + [(0, 0)] * (one.ndim - 3),
+                              constant_values=fill)
+            out[key] = pool.at[:, slot].set(row.astype(pool.dtype))
+        return out
