@@ -24,11 +24,12 @@ import sys, json
 sys.path.insert(0, "src")
 import jax, jax.numpy as jnp
 from repro.parallel.pipeline import make_pipelined_loss
+from repro.parallel.plan import resolve_plan
 from repro.core.hlo_cost import analyze_hlo
 
 L, D, F = 8, 128, 512
 M, mb, S = 8, 2, 64
-mesh = jax.make_mesh((8,), ("pipe",))
+mesh = resolve_plan("pipe=8").mesh()
 import numpy as np
 ws = {
     "w1": jnp.asarray(np.random.randn(L, D, F), jnp.float32) * 0.05,

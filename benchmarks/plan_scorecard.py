@@ -1,0 +1,106 @@
+"""Parallelism-planner scorecard matrix (repro.parallel.plan).
+
+For ≥3 registered configs × {single-pod (256 chips), multi-pod (512)} the
+auto-planner enumerates (pod, data, model[, pipe]) layouts, scores them
+with the fabric analytical model, and must pick a layout whose modeled
+cross-pod spine traffic is never worse — and for at least one config
+strictly lower — than the naive hard-coded production mesh (flat
+collective schedule).  A subprocess additionally demonstrates the HLO
+probe: the top finalists for an 8-chip plan are actually lowered and
+re-ranked with while-aware HLO cost totals (core.hlo_cost).
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import time
+
+from benchmarks.common import emit
+
+CONFIGS = ("qwen3-32b", "mixtral-8x22b", "gemma3-4b")
+SCENARIOS = (("single-pod", 256), ("multi-pod", 512))
+
+_PROBE_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+sys.path.insert(0, "src")
+from repro.configs import reduced_config, register_config
+from repro.core.config import ShapeConfig, StepKind
+from repro.parallel.plan import plan_parallelism
+
+cfg = reduced_config("qwen3-32b")
+register_config("plan-probe", cfg, cfg)
+shape = ShapeConfig("probe", 64, 8, StepKind.TRAIN)
+plan = plan_parallelism(cfg, chips=8, shape=shape, hlo_probe=True,
+                        probe_arch="plan-probe", probe_shape=shape,
+                        probe_top_k=2)
+rows = [{"layout": str(s.layout), "hlo_coll": s.hlo_coll_bytes,
+         "hlo_flops": s.hlo_flops}
+        for s in plan.scorecard.scores if s.hlo_coll_bytes is not None]
+print("RESULT " + json.dumps({"chosen": str(plan.score.layout),
+                              "probed": rows}))
+"""
+
+
+def _fmt(layout) -> str:
+    """CSV-safe compact layout spelling."""
+    return str(layout).replace("⊗", "x").replace(", ", "/") \
+        .replace("(", "").replace(")", "")
+
+
+def run():
+    from repro.configs import get_config
+    from repro.parallel.plan import plan_parallelism
+
+    strict_wins = 0
+    show = None
+    for arch in CONFIGS:
+        cfg = get_config(arch)
+        for scenario, chips in SCENARIOS:
+            t0 = time.perf_counter()
+            plan = plan_parallelism(cfg, chips=chips,
+                                    objective="min_cross_pod_bytes")
+            us = (time.perf_counter() - t0) * 1e6
+            chosen, naive = plan.score, plan.scorecard.naive
+            assert chosen.cross_pod_bytes <= naive.cross_pod_bytes, (
+                f"{arch}/{scenario}: planner chose MORE cross-pod traffic "
+                f"than the naive mesh ({chosen.cross_pod_bytes:.3e} > "
+                f"{naive.cross_pod_bytes:.3e})")
+            if chosen.cross_pod_bytes < naive.cross_pod_bytes:
+                strict_wins += 1
+                if show is None:
+                    show = plan.scorecard
+            emit(f"plan.{arch}.{scenario}", us,
+                 f"layout={_fmt(chosen.layout)};"
+                 f"xpod_GB={chosen.cross_pod_bytes / 1e9:.2f};"
+                 f"naive_xpod_GB={naive.cross_pod_bytes / 1e9:.2f};"
+                 f"step_s={chosen.step_s:.3f};"
+                 f"naive_step_s={naive.step_s:.3f}")
+    assert strict_wins >= 1, (
+        "planner never strictly beat the naive mesh on cross-pod bytes")
+    if show is not None:
+        print(show)
+
+    # HLO probe: lower the finalists for real and re-rank on compiled cost
+    t0 = time.perf_counter()
+    out = subprocess.run([sys.executable, "-c", _PROBE_CHILD],
+                         capture_output=True, text=True, cwd=".",
+                         timeout=900)
+    us = (time.perf_counter() - t0) * 1e6
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    if not line:
+        emit("plan.hlo_probe", us, f"FAILED:{out.stderr[-200:]}")
+        raise RuntimeError(out.stderr[-2000:])
+    res = json.loads(line[0][len("RESULT "):])
+    assert len(res["probed"]) == 2 and all(
+        r["hlo_flops"] > 0 for r in res["probed"]), res
+    emit("plan.hlo_probe", us,
+         f"chosen={_fmt(res['chosen'])};" + ";".join(
+             f"{_fmt(r['layout'])}:coll={r['hlo_coll']:.3e}"
+             for r in res["probed"]))
+
+
+if __name__ == "__main__":
+    run()

@@ -24,6 +24,8 @@ SUITES = [
     ("scheduler", "benchmarks.scheduler_study"),    # §8.5 (beyond paper)
     ("serving", "benchmarks.serving_load"),         # serving SLOs (§7 mix)
     ("roofline", "benchmarks.roofline_table"),      # §Roofline
+    ("plan", "benchmarks.plan_scorecard"),          # parallelism planner
+    ("canary", "benchmarks.dryrun_canary"),         # dry-run artifact drift
 ]
 
 

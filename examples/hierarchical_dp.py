@@ -23,18 +23,30 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.collectives import hierarchical_psum
+from repro.core.collectives import hierarchical_psum, shard_map_compat
+from repro.parallel.plan import resolve_plan
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--compress", default="none",
                     choices=["none", "bf16", "int8"])
+    ap.add_argument("--plan", default="pod=2,data=4",
+                    help="ParallelPlan spec (pod axis = spine hop)")
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--respawned", action="store_true")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    # The plan carries mesh AND collective schedule: the pod axis is the
+    # spine hop, so the gradient reduction below pre-reduces over the
+    # intra-pod rail axis before crossing it (paper C1).
+    plan = resolve_plan(args.plan)
+    sched = plan.collectives
+    mesh = plan.mesh()
+    dp_axes = tuple(a for a in plan.axis_names if a in ("pod", "data"))
+    n_dp = plan.chips
+    assert dp_axes, "this example data-parallelizes: plan needs pod/data"
+    print(plan.describe())
     D, H, C = 64, 128, 16
     rng = np.random.default_rng(0)
     params = {
@@ -53,18 +65,24 @@ def main():
         # reduce-scatter intra-rail -> cross-pod all-reduce (1/N bytes,
         # optionally compressed) -> all-gather intra-rail
         loss, g = jax.value_and_grad(loss_fn)(p, x, y)
-        g = jax.tree.map(functools.partial(
-            hierarchical_psum, intra_axis="data", inter_axis="pod",
-            compress=args.compress), g)
-        g = jax.tree.map(lambda v: v / 8.0, g)
-        loss = jax.lax.pmean(jax.lax.pmean(loss, "data"), "pod")
+        if sched.intra_axis is not None:
+            g = jax.tree.map(functools.partial(
+                hierarchical_psum, intra_axis=sched.intra_axis,
+                inter_axis=sched.inter_axis, compress=args.compress), g)
+        else:                       # no rail axis to pre-reduce over
+            for ax in dp_axes:
+                g = jax.tree.map(
+                    functools.partial(jax.lax.psum, axis_name=ax), g)
+        g = jax.tree.map(lambda v: v / n_dp, g)
+        for ax in dp_axes:
+            loss = jax.lax.pmean(loss, ax)
         p = jax.tree.map(lambda w, gw: w - 0.3 * gw, p, g)
         return p, loss
 
-    sharded_step = jax.jit(jax.shard_map(
+    sharded_step = jax.jit(shard_map_compat(
         step, mesh=mesh,
-        in_specs=(P(), P(("pod", "data")), P(("pod", "data"))),
-        out_specs=(P(), P()), check_vma=False))
+        in_specs=(P(), P(dp_axes), P(dp_axes)),
+        out_specs=(P(), P())))
 
     losses = []
     w_true = rng.standard_normal((D, C))      # fixed ground-truth mapping

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.parallel.pipeline import make_pipelined_loss
+from repro.parallel.plan import PipelineSpec, resolve_plan
 
 
 def main():
@@ -28,8 +29,13 @@ def main():
     ap.add_argument("--steps", type=int, default=20)
     args = ap.parse_args()
 
-    P_, L, D = 4, 8, 32
-    mesh = jax.make_mesh((P_,), ("pipe",))
+    L, D = 8, 32
+    # staging comes from the plan: 4 pipeline stages over the pipe axis
+    plan = resolve_plan("pipe=4").replace(pipeline=PipelineSpec(
+        stages=4, vp=args.vp, microbatches=args.micro))
+    P_ = plan.pipeline.stages
+    mesh = plan.mesh()
+    print(plan.describe())
     rng = np.random.default_rng(0)
     ws = jnp.asarray(rng.standard_normal((L, D, D)) * 0.2, jnp.float32)
 
@@ -43,7 +49,9 @@ def main():
         return jnp.mean((h - target) ** 2)
 
     ploss = make_pipelined_loss(mesh, stage_fn, loss_fn,
-                                num_micro=args.micro, vp=args.vp)
+                                num_micro=plan.pipeline.microbatches,
+                                axis=plan.pipeline.axis,
+                                vp=plan.pipeline.vp)
     gfn = jax.jit(jax.value_and_grad(ploss))
 
     x = jnp.asarray(rng.standard_normal((args.micro, 2, D)), jnp.float32)

@@ -1,5 +1,6 @@
-"""Quickstart: build any assigned architecture, run a train step, a
-prefill and a decode step — the public API in ~40 lines.
+"""Quickstart: plan the parallelism for an architecture, then build it
+and run a train step, a prefill and a decode step — the public API in
+~50 lines.
 
     PYTHONPATH=src python examples/quickstart.py --arch qwen3-32b
 """
@@ -11,18 +12,28 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
-from repro.configs import list_archs, reduced_config
+from repro.configs import get_config, list_archs, reduced_config
 from repro.core.config import ShapeConfig, StepKind
 from repro.models.model import build_model, make_concrete_batch
+from repro.parallel.plan import plan_parallelism
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-32b",
                     choices=list_archs() + ["all"])
+    ap.add_argument("--chips", type=int, default=512,
+                    help="chip count for the parallelism plan")
     args = ap.parse_args()
     archs = list_archs() if args.arch == "all" else [args.arch]
 
+    # 1. plan the layout (deviceless — pure fabric/cost modeling).
+    #    On a real cluster: mesh = plan.mesh(); plan.shardings(state, axes)
+    plan = plan_parallelism(get_config(archs[0]), chips=args.chips)
+    print(plan.scorecard)
+    print(plan.describe(), "\n")
+
+    # 2. build + run the model(s), reduced-size, on this host
     for arch in archs:
         cfg = reduced_config(arch)          # full config: get_config(arch)
         model = build_model(cfg, remat="none")

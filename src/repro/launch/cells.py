@@ -48,10 +48,21 @@ def _tree_shardings(abstract, axes, mesh, rules):
                                     for e in t)))
 
 
-def build_cell(arch: str, shape_name: str, mesh, *,
-               rules=None, run_overrides: Optional[Dict] = None) -> Cell:
+def build_cell(arch: str, shape_name, mesh=None, *,
+               plan=None, rules=None,
+               run_overrides: Optional[Dict] = None) -> Cell:
+    """Assemble one (arch × shape) cell.
+
+    ``shape_name`` is a SHAPES key or a :class:`ShapeConfig`; layout comes
+    either from an explicit ``(mesh, rules)`` pair or from a
+    :class:`repro.parallel.plan.ParallelPlan` (``plan=``), which supplies
+    both."""
+    if plan is not None:
+        mesh = mesh if mesh is not None else plan.mesh()
+        rules = rules if rules is not None else plan.rules
     cfg = get_config(arch)
-    shape = SHAPES[shape_name]
+    shape = shape_name if isinstance(shape_name, ShapeConfig) \
+        else SHAPES[shape_name]
     ok, why = shape_applicable(cfg, shape)
     if not ok:
         raise SkipCell(why)

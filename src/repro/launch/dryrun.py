@@ -28,16 +28,20 @@ from repro.configs import ASSIGNED, get_config, list_archs
 from repro.core.config import SHAPES, StepKind, shape_applicable
 from repro.core.roofline import analyze, memory_analysis_dict
 from repro.launch.cells import Cell, SkipCell, build_cell
-from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.launch.mesh import mesh_chips
 from repro.parallel import sharding as shd
+from repro.parallel.plan import resolve_plan
 
 OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
 
-def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
-             rules=None, run_overrides=None, out_dir=OUT_DIR,
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             plan=None, rules=None, run_overrides=None, out_dir=OUT_DIR,
              tag: str = "", verbose: bool = True):
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if plan is None:
+        plan = resolve_plan("multi-pod" if multi_pod else "single-pod")
+    mesh = plan.mesh()
+    rules = rules if rules is not None else plan.rules
     mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
     chips = mesh_chips(mesh)
     t0 = time.time()
@@ -122,9 +126,15 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--plan", default=None,
+                    help="auto | single-pod | multi-pod | JSON plan file | "
+                         "pod=2,data=16,model=16 (overrides --multi-pod)")
     ap.add_argument("--include-paper-archs", action="store_true",
                     help="also run gpt3-175b / llama2-70b extras")
     args = ap.parse_args(argv)
+    if args.plan and args.both_meshes:
+        ap.error("--plan overrides the mesh choice; it cannot be combined "
+                 "with --both-meshes (run twice with different --plan)")
 
     cells = []
     if args.all:
@@ -150,7 +160,14 @@ def main(argv=None):
                 print(f"-- SKIP {arch} × {shape_name}: {why}")
                 continue
             try:
-                run_cell(arch, shape_name, multi_pod=multi_pod)
+                plan = None
+                if args.plan:
+                    plan = resolve_plan(args.plan, cfg,
+                                        chips=jax.device_count(),
+                                        shape=SHAPES[shape_name])
+                    if plan.scorecard is not None:
+                        print(plan.scorecard)
+                run_cell(arch, shape_name, multi_pod=multi_pod, plan=plan)
             except Exception as e:  # noqa: BLE001 - report and continue
                 traceback.print_exc()
                 failures.append((arch, shape_name, multi_pod, repr(e)))

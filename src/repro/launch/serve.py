@@ -23,6 +23,7 @@ import numpy as np
 from repro.configs import get_config, reduced_config
 from repro.core.telemetry import ServingTelemetry
 from repro.models.model import build_model
+from repro.parallel.plan import resolve_plan
 from repro.serving import Engine, SamplingParams
 from repro.serving.mix import sample_prompt_len
 
@@ -35,6 +36,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="reduced config (default; --no-reduced = full size)")
+    ap.add_argument("--plan", default=None,
+                    help="parallelism plan: auto | single-pod | multi-pod | "
+                         "JSON plan file | pod=2,data=16,model=16 "
+                         "(default: no sharding)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prefill-len", type=int, default=64)
@@ -66,10 +71,17 @@ def main(argv=None) -> int:
     model = build_model(cfg, remat="none")
     params = model.init(jax.random.key(args.seed), dtype=jnp.float32)
 
+    plan = None
+    if args.plan:
+        plan = resolve_plan(args.plan, cfg, chips=jax.device_count())
+        if not plan.is_trivial:
+            print(plan.describe(), flush=True)
+
     telemetry = ServingTelemetry(args.telemetry)
     engine = Engine(model, params, slots=args.slots,
                     prefill_len=args.prefill_len, cache_len=args.cache_len,
-                    prefill_chunk=args.prefill_chunk, telemetry=telemetry)
+                    prefill_chunk=args.prefill_chunk, telemetry=telemetry,
+                    plan=plan)
 
     rng = np.random.default_rng(args.seed)
     on_token = None

@@ -6,13 +6,15 @@
 Wires every substrate together: config registry -> model -> data pipeline
 (packed, prefetched) -> train_step (AdamW, clip, remat) -> checkpoint
 manager (async, atomic, preemption events) -> telemetry.  ``--restore``
-resumes exactly (including the data-pipeline cursor).  On a real TPU
-cluster the same driver runs under jax.distributed with the production
-mesh; on this container it runs reduced configs on CPU.
+resumes exactly (including the data-pipeline cursor).  ``--plan`` picks
+the parallelism layout (repro.parallel.plan): on a real TPU cluster the
+same driver runs under jax.distributed with the production plan; on this
+container it runs reduced configs on CPU (or fake devices via XLA_FLAGS).
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import sys
 import time
 
@@ -26,13 +28,23 @@ from repro.core.config import (OptimizerConfig, ParallelConfig, RunConfig,
 from repro.checkpoint import CheckpointManager
 from repro.data import PackedPipeline, Prefetcher
 from repro.models.model import build_model
-from repro.train.step import init_train_state, make_train_step
+from repro.parallel.plan import resolve_plan
+from repro.train.step import (init_train_state, make_train_step,
+                              train_state_logical_axes)
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="qwen3-32b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # BooleanOptionalAction: plain store_true with default=True silently
+    # made full configs unreachable (--no-reduced would not exist)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced config (default; --no-reduced = full size)")
+    ap.add_argument("--plan", default=None,
+                    help="parallelism plan: auto | single-pod | multi-pod | "
+                         "JSON plan file | pod=2,data=16,model=16 "
+                         "(default: no sharding — single-process run)")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
@@ -47,7 +59,11 @@ def main(argv=None) -> int:
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--telemetry", default="",
                     help="JSONL path for step telemetry (loss, tok/s, MFU)")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     shape = ShapeConfig("train", args.seq, args.batch, StepKind.TRAIN)
@@ -60,8 +76,29 @@ def main(argv=None) -> int:
                                   grad_compression=args.grad_compression),
         seed=args.seed)
 
+    plan = None
+    if args.plan:
+        plan = resolve_plan(args.plan, cfg, chips=jax.device_count(),
+                            shape=shape)
+        if plan.is_trivial:
+            plan = None                 # single device: nothing to shard
+        else:
+            print(plan.describe(), flush=True)
+
+    with contextlib.ExitStack() as scope:
+        mesh = scope.enter_context(plan.activate()) \
+            if plan is not None else None
+        return _run(args, cfg, shape, run_cfg, plan, mesh)
+
+
+def _run(args, cfg, shape, run_cfg, plan, mesh) -> int:
     model = build_model(cfg, remat=args.remat)
     state = init_train_state(model, run_cfg, jax.random.key(args.seed))
+    if plan is not None:
+        state = jax.device_put(
+            state, plan.shardings(state,
+                                  train_state_logical_axes(model, run_cfg),
+                                  mesh=mesh))
     step_fn = jax.jit(make_train_step(model, run_cfg))
     pipe = PackedPipeline(cfg, shape, seed=args.seed)
 

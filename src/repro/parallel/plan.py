@@ -1,0 +1,747 @@
+"""Topology-aware parallelism planning — ONE entry point over mesh /
+sharding / pipeline / fabric.
+
+The paper's central engineering claim (§4.2, Table 10, C1) is that the
+parallelism layout must follow the fabric: the rail-optimized two-pod
+800 GbE leaf–spine makes the cross-pod spine hop the one narrow link, and
+collectives are engineered around it.  Before this module that knowledge
+was scattered over four uncoordinated APIs (``launch.mesh`` hard-coded
+shapes, ``parallel.sharding`` owned rule tables, ``parallel.pipeline``
+staged by hand, ``core.fabric``/``core.collectives`` modelled costs nobody
+consulted at plan time).  ``ParallelPlan`` unifies them:
+
+    plan = plan_parallelism(get_config("qwen3-32b"), chips=512)
+    print(plan.scorecard)            # every candidate layout, scored
+    mesh = plan.mesh()               # jax Mesh, pod boundary on the
+                                     # slowest-varying axis
+    shardings = plan.shardings(state, axes)   # logical-rule resolution
+    with plan.activate():            # ambient mesh + rules for constrain()
+        jax.jit(step)(...)
+
+The auto-planner enumerates candidate ``(pod, data, model[, pipe])``
+factorizations of the chip count, scores each with the fabric analytical
+model (cross-pod spine bytes, per-rail NIC utilization, DCQCN throughput
+collapse under incast — :mod:`repro.core.fabric`) plus the hierarchical
+collective schedule of :mod:`repro.core.collectives`, and optionally
+refines finalists with while-aware HLO cost analysis
+(:mod:`repro.core.hlo_cost`) of the actually-lowered step.
+
+Traffic model (documented invariants, per training step):
+
+* DP gradients.  Grads per (model, pipe) shard are ``P/(model·pipe)``
+  bytes (fp32 wire).  A *flat* ring all-reduce over the pod-spanning
+  ``pod×data`` axis pushes ~``2·G`` per ring link and every DP ring
+  crosses the spine on ``pods`` cut links → ``4·P_bytes`` total spine
+  traffic.  The *hierarchical* schedule (reduce-scatter intra-rail →
+  cross-pod all-reduce on ``1/data`` of the bytes → all-gather, exactly
+  ``collectives.hierarchical_psum``) crosses the spine with pre-reduced
+  data only: ``2·(pods-1)/pods · P_bytes`` (× the optional bf16/int8
+  compression factor).
+* Pipeline across pods.  Placing the ``pipe`` axis on the pod boundary
+  replaces the spine's share of the gradient all-reduce with microbatch
+  activation point-to-point: ``2 · tokens · d_model · act_bytes`` per
+  cut — usually orders of magnitude below the gradient volume, the
+  classic "pipeline over the slow domain" layout the planner can now
+  discover instead of it being hand-coded.
+* TP / EP / FSDP stay on intra-pod rails and are charged against per-NIC
+  bandwidth (``FabricSpec.nic_bw``); the spine leg is charged against
+  the leaf–spine bisection with the DCQCN throughput factor for the
+  synchronized-burst oversubscription the paper measures in Table 10.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import math
+import os
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.config import CHIP, ModelConfig, SHAPES, ShapeConfig, StepKind
+from repro.core.fabric import (FABRIC, FabricSpec, dcqcn_throughput_factor)
+from repro.parallel.sharding import (Rules, _DEFAULT_RULES, logical_to_spec,
+                                     tree_shardings, use_sharding,
+                                     with_overrides)
+
+GRAD_WIRE_BYTES = 4          # fp32 master gradients on the wire
+ACT_WIRE_BYTES = 2           # bf16 activations / boundary tensors
+RAIL_EFFICIENCY = 0.85       # achievable fraction of NIC line rate
+OVERLAP = 0.7                # comm/compute overlap (Table 10: ~72% measured)
+
+_COMPRESS_FACTOR = {"none": 1.0, "bf16": 0.5, "int8": 0.25, "int8_ef": 0.25}
+
+
+def default_rules() -> Rules:
+    """The production logical-axis rule table (copy; safe to mutate)."""
+    return dict(_DEFAULT_RULES)
+
+
+def pod_capacity(fabric: FabricSpec = FABRIC) -> int:
+    """GPUs a single pod can host (the zero-spine-traffic ceiling)."""
+    return (fabric.nodes // fabric.pods) * fabric.gpus_per_node
+
+
+# ---------------------------------------------------------------------------
+# Plan building blocks
+@dataclass(frozen=True)
+class PipelineSpec:
+    """GPipe staging over a ``pipe`` mesh axis (parallel.pipeline)."""
+    stages: int
+    vp: int = 1                      # virtual pipeline chunks per device
+    microbatches: int = 8
+    axis: str = "pipe"
+    spans_pods: bool = False         # pipe axis sits on the pod boundary
+
+    @property
+    def bubble_fraction(self) -> float:
+        m = max(self.microbatches * max(self.vp, 1), 1)
+        return (self.stages - 1) / (m + self.stages - 1) if self.stages > 1 \
+            else 0.0
+
+
+@dataclass(frozen=True)
+class CollectiveSchedule:
+    """How DP gradients reduce (core.collectives.hierarchical_psum)."""
+    intra_axis: Optional[str] = "data"    # rail-level reduce-scatter axis
+    inter_axis: Optional[str] = None      # spine-crossing all-reduce axis
+    hierarchical: bool = True             # False = flat GSPMD all-reduce
+    compress: str = "none"                # cross-pod wire compression
+
+
+@dataclass(frozen=True)
+class Layout:
+    """One candidate (pod, data, model[, pipe]) factorization."""
+    pod: int = 1
+    data: int = 1
+    model: int = 1
+    pipe: int = 1
+    pipe_spans_pods: bool = False
+
+    @property
+    def chips(self) -> int:
+        return self.pod * self.data * self.model * self.pipe
+
+    @property
+    def dp_ranks(self) -> int:
+        return self.pod * self.data
+
+    def mesh_tuple(self) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+        """(shape, axis_names); the pod-spanning axis is slowest-varying so
+        contiguous device halves land in contiguous pods."""
+        dims: List[Tuple[str, int]] = []
+        if self.pipe > 1 and self.pipe_spans_pods:
+            dims.append(("pipe", self.pipe))
+        if self.pod > 1:
+            dims.append(("pod", self.pod))
+        if self.pipe > 1 and not self.pipe_spans_pods:
+            dims.append(("pipe", self.pipe))
+        if self.data > 1:
+            dims.append(("data", self.data))
+        if self.model > 1:
+            dims.append(("model", self.model))
+        if not dims:
+            dims = [("data", 1)]
+        return (tuple(s for _, s in dims), tuple(n for n, _ in dims))
+
+    def __str__(self) -> str:
+        parts = []
+        if self.pipe > 1:
+            parts.append(f"pipe={self.pipe}"
+                         + ("⊗pod" if self.pipe_spans_pods else ""))
+        if self.pod > 1:
+            parts.append(f"pod={self.pod}")
+        parts.append(f"data={self.data}")
+        parts.append(f"model={self.model}")
+        return "(" + ", ".join(parts) + ")"
+
+
+class _MeshShape:
+    """Deviceless mesh stand-in: just ``.shape`` (all logical_to_spec
+    needs), so plans resolve shardings without building jax devices."""
+
+    def __init__(self, shape: Dict[str, int]):
+        self.shape = dict(shape)
+
+
+# ---------------------------------------------------------------------------
+# Scoring
+@dataclass(frozen=True)
+class LayoutScore:
+    layout: Layout
+    cross_pod_bytes: float           # total spine-crossing bytes / step
+    rail_bytes_per_gpu: float        # intra-pod NIC bytes / step / GPU
+    compute_s: float
+    rail_s: float
+    spine_s: float
+    step_s: float                    # modeled step time (overlap + bubble)
+    dcqcn_factor: float              # spine throughput under incast
+    rail_utilization: float          # rail_s / step_s (port busy fraction)
+    hbm_per_gpu: float
+    feasible: bool
+    fallbacks: Tuple[str, ...]       # logical dims that replicate (rule
+    schedule: CollectiveSchedule = CollectiveSchedule()      # fallback)
+    hlo_flops: Optional[float] = None        # per-device, from HLO probe
+    hlo_bytes: Optional[float] = None
+    hlo_coll_bytes: Optional[float] = None
+    notes: str = ""
+
+    def row(self) -> str:
+        probe = (f" hloColl={self.hlo_coll_bytes / 1e9:8.2f}GB"
+                 if self.hlo_coll_bytes is not None else "")
+        return (f"{str(self.layout):34s} xpod={self.cross_pod_bytes / 1e9:9.2f}GB "
+                f"rail={self.rail_bytes_per_gpu / 1e9:8.2f}GB/gpu "
+                f"step={self.step_s:7.3f}s dcqcn={self.dcqcn_factor:4.2f} "
+                f"{'ok ' if self.feasible else 'OOM'}"
+                f"{probe}"
+                + (f" fallbacks={','.join(self.fallbacks)}"
+                   if self.fallbacks else ""))
+
+
+def _sharding_fallbacks(cfg: ModelConfig, shape: ShapeConfig, layout: Layout,
+                        rules: Rules) -> Tuple[str, ...]:
+    """Logical dims whose rule candidates reference live mesh axes but
+    still resolve replicated (divisibility/exclusivity fallback) — the MQA
+    kv_heads=1 / Mixtral 8-experts-on-16-way / global_batch=1 cases."""
+    mesh_shape, axis_names = layout.mesh_tuple()
+    mesh = _MeshShape(dict(zip(axis_names, mesh_shape)))
+    live = {a for a, s in mesh.shape.items() if s > 1}
+    probes: List[Tuple[str, int]] = [("batch", shape.global_batch)]
+    if cfg.num_heads:
+        probes.append(("heads", cfg.num_heads))
+    if cfg.num_kv_heads:
+        probes.append(("kv_heads", cfg.num_kv_heads))
+    if cfg.num_experts:
+        probes.append(("experts", cfg.num_experts))
+    if cfg.d_ff:
+        probes.append(("mlp", cfg.d_ff))
+    probes.append(("vocab", cfg.padded_vocab))
+    out = []
+    for name, dim in probes:
+        cands = rules.get(name, ())
+        wants_live = any(set(c) & live for c in cands)
+        if not wants_live:
+            continue
+        spec = logical_to_spec((name,), (dim,), mesh, rules)
+        if len(spec) == 0 or spec[0] is None:
+            out.append(name)
+    return tuple(out)
+
+
+def score_layout(cfg: ModelConfig, shape: ShapeConfig, layout: Layout,
+                 *, fabric: FabricSpec = FABRIC,
+                 schedule: Optional[CollectiveSchedule] = None,
+                 rules: Optional[Rules] = None) -> LayoutScore:
+    """Score one candidate layout with the fabric analytical model.
+
+    All byte formulas are per *training* step (the shape's kind scales
+    FLOPs; serving steps have no gradient reduction)."""
+    rules = rules if rules is not None else _DEFAULT_RULES
+    if schedule is None:
+        schedule = CollectiveSchedule(
+            inter_axis="pod" if layout.pod > 1 else None)
+    tokens = shape.tokens_per_step
+    train = shape.kind == StepKind.TRAIN
+    chips = layout.chips
+
+    param_bytes = cfg.param_count() * GRAD_WIRE_BYTES
+    grad_shard = param_bytes / (layout.model * layout.pipe)   # per DP ring
+    local_tokens = tokens / max(layout.dp_ranks, 1)
+    layers_per_stage = max(cfg.num_layers // layout.pipe, 1)
+
+    flops = (cfg.flops_per_token() if train
+             else 2.0 * cfg.param_count(active_only=True)) * tokens
+    compute_s = flops / (chips * CHIP.peak_bf16_flops)
+
+    # --- intra-pod rail traffic, per GPU --------------------------------
+    rail = 0.0
+    if train and layout.dp_ranks > 1:
+        # FSDP/ZeRO reduce-scatter + all-gather over the data rail group
+        rail += 2 * (layout.data - 1) / max(layout.data, 1) * grad_shard
+    if layout.model > 1 and cfg.uses_attention:
+        # 2 activation all-reduces per layer fwd (+2 bwd when training)
+        n_ar = (4 if train else 2) * layers_per_stage
+        rail += (n_ar * 2 * (layout.model - 1) / layout.model
+                 * local_tokens * cfg.d_model * ACT_WIRE_BYTES)
+    if layout.model > 1 and cfg.num_experts:
+        # EP all-to-all dispatch+combine (fwd; ×2 when training)
+        rail += ((4 if train else 2) * local_tokens
+                 * cfg.num_experts_per_tok * cfg.d_model * ACT_WIRE_BYTES
+                 * (layout.model - 1) / layout.model)
+    if layout.pipe > 1 and not layout.pipe_spans_pods:
+        # stage-boundary activations stay on intra-pod rails
+        rail += ((2 if train else 1) * local_tokens * cfg.d_model
+                 * ACT_WIRE_BYTES)
+    rail_s = rail / (fabric.nic_bw * RAIL_EFFICIENCY)
+
+    # --- cross-pod spine traffic, total --------------------------------
+    spans = layout.pod > 1 or layout.pipe_spans_pods
+    cross = 0.0
+    if spans and layout.pipe_spans_pods:
+        # activation p2p at the one stage boundary on the pod cut
+        cross = ((2 if train else 1) * tokens * cfg.d_model
+                 * ACT_WIRE_BYTES)
+    elif spans and train:
+        if schedule.hierarchical:
+            cross = (2 * (layout.pod - 1) / layout.pod * param_bytes
+                     * _COMPRESS_FACTOR.get(schedule.compress, 1.0))
+        else:
+            # flat ring over pod×data: ~2·G per ring link, `pods` cut
+            # links per ring, model·pipe rings
+            cross = 2 * grad_shard * layout.pod * layout.model * layout.pipe
+    bisection = fabric.leaf_per_pod * fabric.spines * fabric.leaf_spine_bw
+    dcqcn = 1.0
+    if cross > 0:
+        offered = (chips / fabric.pods) * fabric.nic_bw / bisection
+        dcqcn = dcqcn_throughput_factor(offered, fabric)
+    spine_s = cross / (bisection * dcqcn) if cross else 0.0
+
+    # --- memory feasibility ---------------------------------------------
+    state_mult = 4.0 if train else 0.5            # p+g+2×adam | bf16 params
+    shard = layout.model * layout.pipe * (layout.dp_ranks if train else 1)
+    hbm = param_bytes * state_mult / max(shard, 1)
+    hbm += (local_tokens / max(layout.pipe, 1)) * cfg.d_model \
+        * ACT_WIRE_BYTES * 8                      # live activation estimate
+    feasible = hbm < CHIP.hbm_bytes
+
+    bubble = 0.0
+    if layout.pipe > 1:
+        bubble = PipelineSpec(stages=layout.pipe,
+                              microbatches=max(8, 2 * layout.pipe)
+                              ).bubble_fraction
+    comm_s = rail_s + spine_s
+    step_s = (compute_s + (1.0 - OVERLAP) * comm_s) / max(1.0 - bubble, 1e-9)
+
+    return LayoutScore(
+        layout=layout, cross_pod_bytes=cross, rail_bytes_per_gpu=rail,
+        compute_s=compute_s, rail_s=rail_s, spine_s=spine_s, step_s=step_s,
+        dcqcn_factor=dcqcn,
+        rail_utilization=min(rail_s / step_s, 1.0) if step_s else 0.0,
+        hbm_per_gpu=hbm, feasible=feasible,
+        fallbacks=_sharding_fallbacks(cfg, shape, layout, rules),
+        schedule=schedule)
+
+
+def naive_production_layout(chips: int,
+                            fabric: FabricSpec = FABRIC) -> Layout:
+    """What ``make_production_mesh`` hard-coded for this chip count — the
+    planner's baseline (flat collective schedule, no fabric awareness)."""
+    if chips > pod_capacity(fabric):
+        pods = math.ceil(chips / pod_capacity(fabric))
+        rest = chips // pods
+        model = 16 if rest % 16 == 0 else 1
+        return Layout(pod=pods, data=rest // model, model=model)
+    model = 16 if chips % 16 == 0 and chips >= 256 else \
+        max(d for d in (1, 2, 4, 8) if chips % d == 0)
+    return Layout(pod=1, data=chips // model, model=model)
+
+
+def enumerate_layouts(cfg: ModelConfig, chips: int,
+                      fabric: FabricSpec = FABRIC) -> List[Layout]:
+    """Candidate (pod, data, model[, pipe]) factorizations of ``chips``."""
+    cap = pod_capacity(fabric)
+    if chips > cap * fabric.pods:
+        raise ValueError(f"{chips} chips exceed fabric capacity "
+                         f"{cap * fabric.pods}")
+    pods = math.ceil(chips / cap)
+    model_opts = [m for m in (1, 2, 4, 8, 16, 32) if chips % m == 0]
+    pipe_opts = [p for p in (1, 2, 4, 8, 16)
+                 if chips % p == 0 and cfg.num_layers % p == 0]
+    out: List[Layout] = []
+    for m in model_opts:
+        for p in pipe_opts:
+            # m and p each divide chips, but their PRODUCT may not —
+            # every branch must re-check or the truncated `rest` yields
+            # a layout using fewer chips than requested
+            if chips % (m * p) != 0:
+                continue
+            if pods == 1:
+                rest = chips // (m * p)
+                if rest >= 1:
+                    out.append(Layout(pod=1, data=rest, model=m, pipe=p))
+                continue
+            # pod-spanning DP with hierarchical collectives
+            if chips % (pods * m * p) == 0:
+                rest = chips // (pods * m * p)
+                if rest >= 1:
+                    out.append(Layout(pod=pods, data=rest, model=m, pipe=p))
+            # pipeline stages across the pod cut (pipe ≥ pods, pod-major)
+            if p > 1 and p % pods == 0:
+                rest = chips // (m * p)
+                if rest >= 1:
+                    out.append(Layout(pod=1, data=rest, model=m, pipe=p,
+                                      pipe_spans_pods=True))
+    return sorted(set(out), key=lambda l: (l.pipe_spans_pods, l.pipe,
+                                           l.pod, l.model))
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class PlanScorecard:
+    """Every candidate scored, plus the naive baseline — human-readable."""
+    arch: str
+    chips: int
+    objective: str
+    scores: List[LayoutScore]
+    chosen: LayoutScore
+    naive: LayoutScore
+
+    def __str__(self) -> str:
+        lines = [f"ParallelPlan scorecard — {self.arch} @ {self.chips} chips"
+                 f" (objective={self.objective})",
+                 f"  naive  {self.naive.row()}"]
+        for s in self.scores:
+            mark = "→" if s.layout == self.chosen.layout else " "
+            lines.append(f"  {mark}      {s.row()}")
+        win = (1.0 - (self.chosen.cross_pod_bytes
+                      / self.naive.cross_pod_bytes)) * 100 \
+            if self.naive.cross_pod_bytes else 0.0
+        lines.append(f"  chosen {self.chosen.layout} — cross-pod "
+                     f"{self.chosen.cross_pod_bytes / 1e9:.2f} GB/step vs "
+                     f"naive {self.naive.cross_pod_bytes / 1e9:.2f} GB "
+                     f"({win:+.1f}% spine relief)")
+        return "\n".join(lines)
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    """A complete parallelism layout: mesh + rules + staging + schedule.
+
+    Replaces hand-threading ``make_production_mesh`` + ``DEFAULT_RULES``
+    (both kept as deprecation shims over this class)."""
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    rules: Rules = field(default_factory=default_rules)
+    pipeline: Optional[PipelineSpec] = None
+    collectives: CollectiveSchedule = field(default_factory=CollectiveSchedule)
+    fabric: FabricSpec = FABRIC
+    name: str = "custom"
+    score: Optional[LayoutScore] = field(default=None, compare=False,
+                                         repr=False)
+    scorecard: Optional[PlanScorecard] = field(default=None, compare=False,
+                                               repr=False)
+
+    # -- topology ---------------------------------------------------------
+    @property
+    def chips(self) -> int:
+        return int(math.prod(self.mesh_shape))
+
+    @property
+    def is_trivial(self) -> bool:
+        return self.chips <= 1
+
+    def axis_size(self, axis: str) -> int:
+        try:
+            return self.mesh_shape[self.axis_names.index(axis)]
+        except ValueError:
+            return 1
+
+    def mesh(self, devices=None):
+        """Build the jax Mesh (device order: pod-spanning axis slowest)."""
+        import jax
+        import numpy as np
+        from jax.sharding import Mesh
+        if devices is not None:
+            n = int(math.prod(self.mesh_shape))
+            arr = np.asarray(devices[:n]).reshape(self.mesh_shape)
+            return Mesh(arr, self.axis_names)
+        return jax.make_mesh(self.mesh_shape, self.axis_names)
+
+    def _mesh_shape_obj(self) -> _MeshShape:
+        return _MeshShape(dict(zip(self.axis_names, self.mesh_shape)))
+
+    # -- sharding ---------------------------------------------------------
+    def spec(self, logical: Sequence[Optional[str]], shape: Sequence[int]):
+        """Deviceless PartitionSpec resolution through the plan's rules."""
+        return logical_to_spec(logical, shape, self._mesh_shape_obj(),
+                               self.rules)
+
+    def shardings(self, tree, axes_tree, mesh=None):
+        """NamedShardings for a pytree of arrays/ShapeDtypeStructs."""
+        mesh = mesh if mesh is not None else self.mesh()
+        return tree_shardings(tree, axes_tree, mesh, self.rules)
+
+    @contextlib.contextmanager
+    def activate(self, mesh=None):
+        """Ambient mesh + rules (sharding.constrain) and jax mesh context."""
+        mesh = mesh if mesh is not None else self.mesh()
+        with use_sharding(mesh, self.rules):
+            with mesh:
+                yield mesh
+
+    # -- derivation -------------------------------------------------------
+    def with_overrides(self, **rule_overrides) -> "ParallelPlan":
+        """New plan with rule-table entries overridden (perf variants)."""
+        return dataclasses.replace(
+            self, rules=with_overrides(self.rules, **rule_overrides))
+
+    def replace(self, **kw) -> "ParallelPlan":
+        return dataclasses.replace(self, **kw)
+
+    # -- serialization ----------------------------------------------------
+    def to_json(self) -> str:
+        d = {
+            "name": self.name,
+            "mesh_shape": list(self.mesh_shape),
+            "axis_names": list(self.axis_names),
+            "rules": {k: [list(c) for c in v] for k, v in self.rules.items()},
+            "collectives": dataclasses.asdict(self.collectives),
+        }
+        if self.pipeline is not None:
+            d["pipeline"] = dataclasses.asdict(self.pipeline)
+        return json.dumps(d, indent=1)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ParallelPlan":
+        d = json.loads(text)
+        return cls(
+            mesh_shape=tuple(d["mesh_shape"]),
+            axis_names=tuple(d["axis_names"]),
+            rules={k: tuple(tuple(c) for c in v)
+                   for k, v in d.get("rules", {}).items()} or default_rules(),
+            pipeline=PipelineSpec(**d["pipeline"]) if "pipeline" in d
+            else None,
+            collectives=CollectiveSchedule(**d.get("collectives", {})),
+            name=d.get("name", "custom"))
+
+    def describe(self) -> str:
+        mesh = "×".join(f"{a}={s}" for a, s in zip(self.axis_names,
+                                                   self.mesh_shape))
+        lines = [f"ParallelPlan[{self.name}] mesh=({mesh}) "
+                 f"chips={self.chips}"]
+        c = self.collectives
+        if c.inter_axis:
+            lines.append(f"  collectives: {'hierarchical' if c.hierarchical else 'flat'} "
+                         f"intra={c.intra_axis} inter={c.inter_axis} "
+                         f"compress={c.compress}")
+        if self.pipeline:
+            p = self.pipeline
+            lines.append(f"  pipeline: {p.stages} stages vp={p.vp} "
+                         f"micro={p.microbatches}"
+                         + (" (spans pods)" if p.spans_pods else ""))
+        if self.score:
+            lines.append(f"  modeled: cross-pod "
+                         f"{self.score.cross_pod_bytes / 1e9:.2f} GB/step, "
+                         f"step {self.score.step_s:.3f}s, rail util "
+                         f"{self.score.rail_utilization:.2f}")
+        return "\n".join(lines)
+
+    # -- HLO refinement ---------------------------------------------------
+    def hlo_cost(self, arch: str, shape, *, rules=None):
+        """Lower the (arch × shape) cell on this plan's mesh and return
+        while-aware :class:`repro.core.hlo_cost.CostTotals` (per device).
+        Needs ``jax.device_count() >= plan.chips`` (fake devices OK)."""
+        import jax
+        from repro.core.hlo_cost import analyze_hlo
+        from repro.launch.cells import build_cell   # lazy: avoids cycle
+        mesh = self.mesh()
+        with use_sharding(mesh, rules or self.rules):
+            cell = build_cell(arch, shape, mesh, rules=rules or self.rules)
+            with mesh:
+                lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                                  out_shardings=cell.out_shardings
+                                  ).lower(*cell.abstract_args)
+                hlo = lowered.compile().as_text()
+        return analyze_hlo(hlo)
+
+
+def plan_from_layout(layout: Layout, *, rules: Optional[Rules] = None,
+                     fabric: FabricSpec = FABRIC, name: str = "custom",
+                     compress: str = "none",
+                     score: Optional[LayoutScore] = None,
+                     scorecard: Optional[PlanScorecard] = None
+                     ) -> ParallelPlan:
+    shape, axes = layout.mesh_tuple()
+    pipeline = None
+    if layout.pipe > 1:
+        pipeline = PipelineSpec(stages=layout.pipe,
+                                microbatches=max(8, 2 * layout.pipe),
+                                spans_pods=layout.pipe_spans_pods)
+    collectives = CollectiveSchedule(
+        intra_axis="data" if "data" in axes else None,
+        inter_axis="pod" if "pod" in axes else None,
+        hierarchical=True, compress=compress)
+    return ParallelPlan(mesh_shape=shape, axis_names=axes,
+                        rules=rules if rules is not None else default_rules(),
+                        pipeline=pipeline, collectives=collectives,
+                        fabric=fabric, name=name, score=score,
+                        scorecard=scorecard)
+
+
+# ---------------------------------------------------------------------------
+# The auto-planner
+_OBJECTIVES = ("balanced", "min_cross_pod_bytes", "min_step_time")
+
+
+def plan_parallelism(model_cfg: ModelConfig, *, chips: int,
+                     fabric: FabricSpec = FABRIC,
+                     objective: str = "balanced",
+                     shape: Optional[ShapeConfig] = None,
+                     rules: Optional[Rules] = None,
+                     compress: str = "none",
+                     hlo_probe: bool = False,
+                     probe_arch: Optional[str] = None,
+                     probe_shape=None,
+                     probe_top_k: int = 2) -> ParallelPlan:
+    """Map (model config × chip count × fabric) → the best ParallelPlan.
+
+    Enumerates candidate layouts, scores each with the fabric/collectives
+    analytical model, and returns the winner under ``objective`` with the
+    full :class:`PlanScorecard` attached.  With ``hlo_probe=True`` the
+    top-``probe_top_k`` finalists are actually lowered (``probe_arch`` ×
+    ``probe_shape`` on this process's devices) and re-ranked with
+    while-aware HLO cost totals — the compiled step, not just the model.
+    """
+    if objective not in _OBJECTIVES:
+        raise ValueError(f"objective {objective!r} not in {_OBJECTIVES}")
+    shape = shape if shape is not None else SHAPES["train_4k"]
+    rules = rules if rules is not None else default_rules()
+
+    layouts = enumerate_layouts(model_cfg, chips, fabric)
+    scores = [score_layout(model_cfg, shape, l, fabric=fabric, rules=rules,
+                           schedule=CollectiveSchedule(
+                               inter_axis="pod" if l.pod > 1 else None,
+                               compress=compress))
+              for l in layouts]
+
+    def key(s: LayoutScore):
+        penalty = s.step_s * (1.0 + 0.1 * len(s.fallbacks))
+        if objective == "min_cross_pod_bytes":
+            primary = (s.cross_pod_bytes, penalty)
+        elif objective == "min_step_time":
+            primary = (s.step_s, s.cross_pod_bytes)
+        else:
+            primary = (penalty, s.cross_pod_bytes)
+        return (not s.feasible,) + primary + (
+            s.layout.pipe, s.layout.model, s.layout.data)
+
+    scores.sort(key=key)
+
+    if hlo_probe and probe_arch is None:
+        raise ValueError(
+            "hlo_probe=True needs probe_arch (a registry name resolvable "
+            "by launch.cells.build_cell; register reduced configs via "
+            "repro.configs.register_config)")
+    if hlo_probe:
+        import jax
+        if jax.device_count() < chips:
+            raise ValueError(
+                f"hlo_probe needs >= {chips} devices (have "
+                f"{jax.device_count()}); run under "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={chips}")
+        probed = []
+        for s in scores[:probe_top_k]:
+            plan_i = plan_from_layout(s.layout, rules=rules, fabric=fabric)
+            totals = plan_i.hlo_cost(probe_arch,
+                                     probe_shape if probe_shape is not None
+                                     else shape)
+            probed.append(dataclasses.replace(
+                s, hlo_flops=totals.flops, hlo_bytes=totals.bytes_accessed,
+                hlo_coll_bytes=float(totals.collective_total)))
+        # re-rank probed finalists by compiled-step roofline bound
+        def hlo_key(s: LayoutScore):
+            t = max(s.hlo_flops / CHIP.peak_bf16_flops,
+                    s.hlo_bytes / CHIP.hbm_bandwidth,
+                    s.hlo_coll_bytes / CHIP.ici_link_bandwidth)
+            return (t, s.cross_pod_bytes)
+        probed.sort(key=hlo_key)
+        scores = probed + scores[probe_top_k:]
+
+    chosen = scores[0]
+    naive = score_layout(model_cfg, shape, naive_production_layout(chips,
+                                                                   fabric),
+                         fabric=fabric, rules=rules,
+                         schedule=CollectiveSchedule(
+                             inter_axis="pod", hierarchical=False))
+    card = PlanScorecard(arch=model_cfg.name, chips=chips,
+                         objective=objective, scores=scores, chosen=chosen,
+                         naive=naive)
+    return plan_from_layout(chosen.layout, rules=rules, fabric=fabric,
+                            name=f"auto/{objective}", compress=compress,
+                            score=chosen, scorecard=card)
+
+
+# ---------------------------------------------------------------------------
+# Named plans + CLI resolution
+def single_pod_plan(rules: Optional[Rules] = None) -> ParallelPlan:
+    """The mandated (data=16, model=16) single-pod production layout."""
+    return ParallelPlan(mesh_shape=(16, 16), axis_names=("data", "model"),
+                        rules=rules if rules is not None else default_rules(),
+                        collectives=CollectiveSchedule(intra_axis="data"),
+                        name="single-pod")
+
+
+def multi_pod_plan(rules: Optional[Rules] = None) -> ParallelPlan:
+    """The mandated (pod=2, data=16, model=16) two-pod layout with the
+    hierarchical cross-pod collective schedule (paper C1)."""
+    return ParallelPlan(mesh_shape=(2, 16, 16),
+                        axis_names=("pod", "data", "model"),
+                        rules=rules if rules is not None else default_rules(),
+                        collectives=CollectiveSchedule(
+                            intra_axis="data", inter_axis="pod"),
+                        name="multi-pod")
+
+
+def _parse_kv_layout(spec: str) -> Tuple[Layout, int]:
+    kv: Dict[str, int] = {}
+    for part in spec.split(","):
+        k, _, v = part.partition("=")
+        k = k.strip()
+        if k not in ("pod", "data", "model", "pipe", "vp"):
+            raise ValueError(f"unknown layout key {k!r} in {spec!r} "
+                             "(want pod/data/model/pipe/vp)")
+        kv[k] = int(v)
+    vp = kv.pop("vp", 1)
+    if vp > 1 and kv.get("pipe", 1) <= 1:
+        raise ValueError(f"vp={vp} needs pipe>1 in {spec!r}")
+    return Layout(pod=kv.get("pod", 1), data=kv.get("data", 1),
+                  model=kv.get("model", 1), pipe=kv.get("pipe", 1)), vp
+
+
+def resolve_plan(spec: Optional[str] = None,
+                 model_cfg: Optional[ModelConfig] = None, *,
+                 chips: Optional[int] = None,
+                 shape: Optional[ShapeConfig] = None,
+                 fabric: FabricSpec = FABRIC,
+                 objective: str = "balanced",
+                 rules: Optional[Rules] = None) -> ParallelPlan:
+    """One ``--plan`` flag for every launcher.
+
+    ``auto`` | ``single-pod`` | ``multi-pod`` | a JSON plan file |
+    ``pod=2,data=16,model=16``-style explicit layouts.  ``auto`` needs a
+    model config and a chip count (defaults to ``jax.device_count()``).
+    """
+    spec = (spec or "auto").strip()
+    if spec == "single-pod":
+        return single_pod_plan(rules)
+    if spec == "multi-pod":
+        return multi_pod_plan(rules)
+    if spec == "auto":
+        if chips is None:
+            import jax
+            chips = jax.device_count()
+        if chips <= 1:
+            return ParallelPlan(mesh_shape=(1,), axis_names=("data",),
+                                rules=rules if rules is not None
+                                else default_rules(), name="trivial")
+        if model_cfg is None:
+            raise ValueError("--plan auto needs a model config "
+                             "(pass model_cfg to resolve_plan)")
+        return plan_parallelism(model_cfg, chips=chips, fabric=fabric,
+                                objective=objective, shape=shape,
+                                rules=rules)
+    if spec.endswith(".json") or os.path.exists(spec):
+        with open(spec) as f:
+            return ParallelPlan.from_json(f.read())
+    if "=" in spec:
+        layout, vp = _parse_kv_layout(spec)
+        plan = plan_from_layout(layout, rules=rules, fabric=fabric,
+                                name=spec)
+        if vp > 1:
+            plan = plan.replace(pipeline=dataclasses.replace(
+                plan.pipeline, vp=vp))
+        return plan
+    raise ValueError(
+        f"unknown plan spec {spec!r}: want auto | single-pod | multi-pod | "
+        "a JSON plan file | pod=2,data=16,model=16")

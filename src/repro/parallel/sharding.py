@@ -38,7 +38,11 @@ Rules = Dict[str, AxisCandidates]
 #
 # Candidates are tried in order; each entry is a tuple of mesh axes that
 # shard the dimension jointly (e.g. batch over pod AND data).
-DEFAULT_RULES: Rules = {
+#
+# Public access goes through ``repro.parallel.plan`` (``default_rules()``
+# or ``ParallelPlan.rules``); the legacy ``DEFAULT_RULES`` name is a
+# module-``__getattr__`` deprecation shim over this table.
+_DEFAULT_RULES: Rules = {
     # activations
     "batch":        (("pod", "data"), ("data",), ("pod",)),
     "act_seq":      (("model",),),            # sequence parallel regions
@@ -80,12 +84,24 @@ def with_overrides(base: Rules, **overrides: AxisCandidates) -> Rules:
     return out
 
 
+def __getattr__(name: str):
+    if name == "DEFAULT_RULES":
+        import warnings
+        warnings.warn(
+            "repro.parallel.sharding.DEFAULT_RULES is deprecated; use "
+            "repro.parallel.plan (plan.rules / default_rules()) — the "
+            "ParallelPlan API carries the rule table with the mesh",
+            DeprecationWarning, stacklevel=2)
+        return _DEFAULT_RULES
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 # ---------------------------------------------------------------------------
 # Ambient mesh + rules context (threaded through with_logical_constraint).
 class _ShardingCtx(threading.local):
     def __init__(self):
         self.mesh: Optional[Mesh] = None
-        self.rules: Rules = DEFAULT_RULES
+        self.rules: Rules = _DEFAULT_RULES
 
 
 _CTX = _ShardingCtx()
@@ -96,7 +112,7 @@ def use_sharding(mesh: Optional[Mesh], rules: Optional[Rules] = None):
     """Activate a mesh + rule table for ``logical_to_spec``/``constrain``."""
     prev = (_CTX.mesh, _CTX.rules)
     _CTX.mesh = mesh
-    _CTX.rules = rules if rules is not None else DEFAULT_RULES
+    _CTX.rules = rules if rules is not None else _DEFAULT_RULES
     try:
         yield
     finally:

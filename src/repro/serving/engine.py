@@ -22,6 +22,7 @@ wraps ``Engine`` behind the old driver interface.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
@@ -98,7 +99,7 @@ class Engine:
                  prefill_len: int = 64, cache_len: int = 256,
                  prefill_chunk: Optional[int] = None,
                  telemetry: Optional[ServingTelemetry] = None,
-                 clock=time.monotonic):
+                 plan=None, clock=time.monotonic):
         cfg = model.cfg
         if cfg.family in (Family.ENCDEC, Family.AUDIO):
             raise NotImplementedError(
@@ -130,6 +131,17 @@ class Engine:
                 "buffers / SSM state cannot mask pad tokens)",
                 UserWarning, stacklevel=2)
         self.prefill_chunk = prefill_chunk if can_pad else None
+
+        # Parallelism plan (repro.parallel.plan): shard the weights over the
+        # plan's mesh and trace the jitted steps under its ambient
+        # mesh+rules so with_sharding_constraint hints resolve.
+        self._plan = plan if (plan is not None
+                              and not plan.is_trivial) else None
+        if self._plan is not None:
+            self._mesh = self._plan.mesh()
+            self.params = params = jax.device_put(
+                params, self._plan.shardings(params, model.logical_axes(),
+                                             mesh=self._mesh))
 
         self._prefill = jax.jit(model.prefill)
         self._generate = jax.jit(make_generate_step(model))
@@ -198,6 +210,12 @@ class Engine:
         return True
 
     # -- lifecycle internals ----------------------------------------------
+    def _scope(self):
+        """Ambient mesh+rules while tracing/running jitted steps."""
+        if self._plan is not None:
+            return self._plan.activate(self._mesh)
+        return contextlib.nullcontext()
+
     def _bucket_len(self, S: int) -> int:
         if self.prefill_chunk:
             c = self.prefill_chunk
@@ -222,7 +240,8 @@ class Engine:
             batch["positions"] = jnp.asarray(pos)[None]
         if Sp != S:
             batch["length"] = jnp.asarray([S], jnp.int32)
-        logits, cache1 = self._prefill(self.params, batch)
+        with self._scope():
+            logits, cache1 = self._prefill(self.params, batch)
         sp = req.sampling
         first = self._sample1(
             logits,
@@ -297,13 +316,14 @@ class Engine:
             return admitted > 0
         self.cache["len"] = jnp.asarray(int(self.pool.lengths.max()),
                                         jnp.int32)
-        tok, self.cache = self._generate(
-            self.params, self.cache,
-            jnp.asarray(self.last_tok),
-            jnp.asarray(self.pool.positions()),
-            jnp.asarray(self._seeds), jnp.asarray(self._steps),
-            jnp.asarray(self._temp), jnp.asarray(self._top_k),
-            jnp.asarray(self._top_p))
+        with self._scope():
+            tok, self.cache = self._generate(
+                self.params, self.cache,
+                jnp.asarray(self.last_tok),
+                jnp.asarray(self.pool.positions()),
+                jnp.asarray(self._seeds), jnp.asarray(self._steps),
+                jnp.asarray(self._temp), jnp.asarray(self._top_k),
+                jnp.asarray(self._top_p))
         tok_host = np.asarray(jax.block_until_ready(tok))
         self.last_tok = tok_host.copy()
         self.ticks += 1

@@ -79,14 +79,14 @@ print("OK")
 
 
 def test_tp_sharded_loss_matches_single_device():
-    """The TP/FSDP-sharded model loss equals the unsharded loss."""
+    """The TP/FSDP-sharded model loss (laid out by a ParallelPlan) equals
+    the unsharded loss."""
     _run_child(r"""
 import jax, jax.numpy as jnp
 from repro.configs import reduced_config
 from repro.core.config import ShapeConfig, StepKind
 from repro.models.model import build_model, make_concrete_batch
-from repro.parallel import sharding as shd
-from repro.parallel.sharding import spec_tree_for_params
+from repro.parallel.plan import resolve_plan
 
 cfg = reduced_config("qwen3-32b")
 model = build_model(cfg, remat="none")
@@ -94,15 +94,39 @@ params = model.init(jax.random.key(0))
 batch = make_concrete_batch(cfg, ShapeConfig("t", 64, 4, StepKind.TRAIN))
 ref = float(model.loss(params, batch)[0])
 
-mesh = jax.make_mesh((2, 4), ("data", "model"))
-with shd.use_sharding(mesh):
-    sh = spec_tree_for_params(
-        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-                     params), model.logical_axes(), mesh)
-    params_s = jax.tree.map(jax.device_put, params, sh)
-    with mesh:
-        got = float(jax.jit(lambda p, b: model.loss(p, b)[0])(params_s,
-                                                              batch))
+plan = resolve_plan("data=2,model=4")
+with plan.activate() as mesh:
+    params_s = jax.device_put(
+        params, plan.shardings(params, model.logical_axes(), mesh=mesh))
+    got = float(jax.jit(lambda p, b: model.loss(p, b)[0])(params_s, batch))
+assert abs(got - ref) < 2e-2, (got, ref)
+print("OK")
+""")
+
+
+def test_auto_plan_is_executable():
+    """plan_parallelism layouts actually build + run: shard a reduced
+    model with the auto plan for this device count and jit a loss."""
+    _run_child(r"""
+import jax, jax.numpy as jnp
+from repro.configs import reduced_config
+from repro.core.config import ShapeConfig, StepKind
+from repro.models.model import build_model, make_concrete_batch
+from repro.parallel.plan import plan_parallelism
+
+cfg = reduced_config("qwen3-32b")
+shape = ShapeConfig("t", 64, 4, StepKind.TRAIN)
+plan = plan_parallelism(cfg, chips=8, shape=shape)
+assert plan.chips == 8 and plan.score is not None
+assert plan.scorecard.chosen.layout == plan.score.layout
+model = build_model(cfg, remat="none")
+params = model.init(jax.random.key(0))
+batch = make_concrete_batch(cfg, shape)
+ref = float(model.loss(params, batch)[0])
+with plan.activate() as mesh:
+    params_s = jax.device_put(
+        params, plan.shardings(params, model.logical_axes(), mesh=mesh))
+    got = float(jax.jit(lambda p, b: model.loss(p, b)[0])(params_s, batch))
 assert abs(got - ref) < 2e-2, (got, ref)
 print("OK")
 """)
@@ -153,12 +177,15 @@ print("OK")
 
 
 def test_dryrun_single_cell_multipod():
-    """The mandated multi-pod dry-run path (512 devices) for one cell."""
+    """The mandated multi-pod dry-run path (512 devices) for one cell,
+    laid out by the named multi-pod ParallelPlan."""
     _run_child(r"""
 import sys
 from repro.launch.dryrun import run_cell
-rep = run_cell("gemma-2b", "decode_32k", multi_pod=True, verbose=False)
-assert rep.chips == 512
+from repro.parallel.plan import resolve_plan
+rep = run_cell("gemma-2b", "decode_32k",
+               plan=resolve_plan("multi-pod"), verbose=False)
+assert rep.chips == 512 and rep.mesh == "2x16x16"
 assert rep.hlo_flops > 0 and rep.memory_s > 0
 print("OK")
 """, devices=512, timeout=900)
