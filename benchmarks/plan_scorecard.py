@@ -24,7 +24,7 @@ SCENARIOS = (("single-pod", 256), ("multi-pod", 512))
 _PROBE_CHILD = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import sys, json
+import sys, json, tempfile, time
 sys.path.insert(0, "src")
 from repro.configs import reduced_config, register_config
 from repro.core.config import ShapeConfig, StepKind
@@ -33,14 +33,27 @@ from repro.parallel.plan import plan_parallelism
 cfg = reduced_config("qwen3-32b")
 register_config("plan-probe", cfg, cfg)
 shape = ShapeConfig("probe", 64, 8, StepKind.TRAIN)
-plan = plan_parallelism(cfg, chips=8, shape=shape, hlo_probe=True,
-                        probe_arch="plan-probe", probe_shape=shape,
-                        probe_top_k=2)
+with tempfile.TemporaryDirectory() as cache:
+    t0 = time.perf_counter()
+    plan = plan_parallelism(cfg, chips=8, shape=shape, hlo_probe=True,
+                            probe_arch="plan-probe", probe_shape=shape,
+                            probe_top_k=2, probe_cache_dir=cache)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    plan2 = plan_parallelism(cfg, chips=8, shape=shape, hlo_probe=True,
+                             probe_arch="plan-probe", probe_shape=shape,
+                             probe_top_k=2, probe_cache_dir=cache)
+    t_warm = time.perf_counter() - t0
 rows = [{"layout": str(s.layout), "hlo_coll": s.hlo_coll_bytes,
          "hlo_flops": s.hlo_flops}
         for s in plan.scorecard.scores if s.hlo_coll_bytes is not None]
+rows2 = [{"layout": str(s.layout), "hlo_coll": s.hlo_coll_bytes,
+          "hlo_flops": s.hlo_flops}
+         for s in plan2.scorecard.scores if s.hlo_coll_bytes is not None]
+assert rows == rows2, (rows, rows2)   # cached probes == measured probes
 print("RESULT " + json.dumps({"chosen": str(plan.score.layout),
-                              "probed": rows}))
+                              "probed": rows, "t_cold_s": t_cold,
+                              "t_warm_s": t_warm}))
 """
 
 
@@ -96,10 +109,12 @@ def run():
     res = json.loads(line[0][len("RESULT "):])
     assert len(res["probed"]) == 2 and all(
         r["hlo_flops"] > 0 for r in res["probed"]), res
+    assert res["t_warm_s"] < res["t_cold_s"], res   # cache skips recompiles
     emit("plan.hlo_probe", us,
-         f"chosen={_fmt(res['chosen'])};" + ";".join(
-             f"{_fmt(r['layout'])}:coll={r['hlo_coll']:.3e}"
-             for r in res["probed"]))
+         f"chosen={_fmt(res['chosen'])};"
+         f"cold_s={res['t_cold_s']:.2f};warm_s={res['t_warm_s']:.2f};"
+         + ";".join(f"{_fmt(r['layout'])}:coll={r['hlo_coll']:.3e}"
+                    for r in res["probed"]))
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ SUITES = [
     ("workload", "benchmarks.workload"),            # Figures 3-7, T13-14
     ("scheduler", "benchmarks.scheduler_study"),    # §8.5 (beyond paper)
     ("serving", "benchmarks.serving_load"),         # serving SLOs (§7 mix)
+    ("kernels", "benchmarks.kernel_bench"),         # decode-path kernels
     ("roofline", "benchmarks.roofline_table"),      # §Roofline
     ("plan", "benchmarks.plan_scorecard"),          # parallelism planner
     ("canary", "benchmarks.dryrun_canary"),         # dry-run artifact drift

@@ -31,7 +31,8 @@ NEG_INF = -1e30
 
 def _flash_fwd_kernel(win_ref, qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
                       o_ref, m_scr, l_scr, acc_scr, *, causal: bool,
-                      scale: float, kv_steps: int):
+                      scale: float, kv_steps: int,
+                      softcap: Optional[float]):
     ki = pl.program_id(3)
 
     @pl.when(ki == 0)
@@ -50,6 +51,9 @@ def _flash_fwd_kernel(win_ref, qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale       # (bq, bk)
+    if softcap is not None:
+        # gemma-style tanh score cap; static param, same math as the ref
+        s = softcap * jnp.tanh(s / softcap)
 
     valid = (kp >= 0)[None, :]
     if causal:
@@ -75,7 +79,8 @@ def _flash_fwd_kernel(win_ref, qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
 
 
 def flash_attention_pallas(q, k, v, q_pos, k_pos, *, causal: bool = True,
-                           window=None, block_q: int = 512,
+                           window=None, softcap: Optional[float] = None,
+                           block_q: int = 512,
                            block_k: int = 512, interpret: bool = False):
     """q: (B,S,H,d); k,v: (B,T,H,d); q_pos: (B,S); k_pos: (B,T).
 
@@ -99,7 +104,8 @@ def flash_attention_pallas(q, k, v, q_pos, k_pos, *, causal: bool = True,
 
     out = pl.pallas_call(
         functools.partial(_flash_fwd_kernel, causal=causal,
-                          scale=1.0 / math.sqrt(d), kv_steps=kv_steps),
+                          scale=1.0 / math.sqrt(d), kv_steps=kv_steps,
+                          softcap=softcap),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda b, h, qi, ki: (0,)),          # window

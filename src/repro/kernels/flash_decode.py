@@ -1,0 +1,164 @@
+"""Pallas TPU grouped split-KV flash-decode forward kernel.
+
+The serving decode hot path (one query token per sequence) is memory
+bound: per decoded token the roofline-optimal kernel reads every live
+K/V cache byte exactly once.  The prefill flash kernel misses that
+optimum twice over — GQA K/V were repeated to the full head count
+before the call (``groups``× the HBM bytes) and the single-token query
+was padded to a whole q block (wasted MXU tiles).  This kernel fixes
+both structurally:
+
+  * **Native GQA layout.**  The ``groups`` q heads that share one KV
+    head ride together as a ``(groups, head_dim)`` tile, so each K/V
+    block is streamed from HBM once and contracted against all of its
+    q heads.  MQA (kv=1) degenerates to one big ``(H, d)`` q tile;
+    MHA to ``groups=1``.
+  * **Split-KV.**  The KV axis is split across the grid
+    (``grid=(B, kv_heads, kv_splits)``) flash-decode style: each
+    program emits partial ``(acc, m, l)`` for its KV block and a
+    log-sum-exp reduction epilogue combines the partials — decode
+    parallelism scales with cache length instead of query length.
+
+Masking is position-based, identical to the prefill kernel: ``k_pos``
+is ``(B, T)`` int32 with -1 marking empty ring-buffer slots, ``q_pos``
+is the per-row absolute decode position (true per-slot lengths from
+``SlotPool``), sliding windows ride in as a scalar operand, and the
+tanh score softcap is a static parameter.
+
+Forward only — decode never differentiates.  ``ops.flash_attention``
+dispatches S==1 calls here (``ref.flash_decode_ref`` is the pure-jnp
+CPU twin).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(win_ref, qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
+                   o_ref, m_ref, l_ref, *, scale: float, causal: bool,
+                   softcap: Optional[float]):
+    """One (batch row × kv head × kv split) program.
+
+    q tile: (G, d) — all q heads of this kv head.  k/v block: (bk, d).
+    Emits the block's partial (acc, m, l); no cross-program state.
+    """
+    q = q_ref[0, 0]                        # (G, d)
+    k = k_ref[0, 0]                        # (bk, d)
+    v = v_ref[0, 0]                        # (bk, d)
+    qp = qpos_ref[0, 0]                    # scalar: this row's position
+    kp = kpos_ref[0]                       # (bk,)
+    window = win_ref[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # (G, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    valid = kp >= 0
+    if causal:
+        valid &= qp >= kp
+    valid &= (qp - kp) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m = s.max(axis=-1)                                     # (G,)
+    # explicit zero for masked columns: a fully-dead block yields l == 0
+    # (not bk), so the epilogue drops it instead of averaging garbage v
+    p = jnp.where(valid[None, :], jnp.exp(s - m[:, None]), 0.0)
+    l = p.sum(axis=-1)                                     # (G,)
+    acc = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (G, d)
+
+    o_ref[0, 0, 0] = acc
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+def flash_decode_pallas(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                        window=None, softcap: Optional[float] = None,
+                        block_k: int = 512, interpret: bool = False):
+    """Grouped split-KV flash decode.
+
+    q: (B, 1, H, d) — ONE query token per row; k, v: (B, T, K, d) at the
+    native kv-head count (H % K == 0, no repeat); q_pos: (B, 1) or (B,);
+    k_pos: (B, T) int32 with -1 = empty slot.  ``window`` may be None,
+    an int, or a traced scalar.  Returns (B, 1, H, d).
+    """
+    B, S, H, d = q.shape
+    T, K = k.shape[1], k.shape[2]
+    if S != 1:
+        raise NotImplementedError("flash decode handles a single query "
+                                  f"token per row (got S={S})")
+    if H % K:
+        raise NotImplementedError(f"q heads {H} not grouped over kv {K}")
+    G = H // K
+    bk = min(block_k, T)
+    if T % bk:
+        raise NotImplementedError("cache length not divisible by block_k")
+    splits = T // bk
+    if window is None:
+        window = 1 << 30
+    window = jnp.asarray(window, jnp.int32).reshape(1)
+    qp = jnp.broadcast_to(q_pos.astype(jnp.int32).reshape(B, -1)[:, :1],
+                          (B, 1))
+
+    # kernel layouts: q (B, K, G, d) — head h = k*G + g reads kv head
+    # h // G, matching the repeat_kv grouping; k/v (B, K, T, d)
+    qg = q[:, 0].reshape(B, K, G, d)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    grid = (B, K, splits)
+
+    o_part, m_part, l_part = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=1.0 / math.sqrt(d),
+                          causal=causal, softcap=softcap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, si: (0,)),            # window
+            pl.BlockSpec((1, 1), lambda b, h, si: (b, 0)),        # q_pos
+            pl.BlockSpec((1, bk), lambda b, h, si: (b, si)),      # k_pos
+            pl.BlockSpec((1, 1, G, d), lambda b, h, si: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, si: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, si: (b, h, si, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G, d),
+                         lambda b, h, si: (b, h, si, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, si: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, si: (b, h, si, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, splits, G, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, splits, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, splits, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(window, qp, k_pos.astype(jnp.int32), qg, kt, vt)
+
+    out = combine_partials(o_part, m_part, l_part)         # (B, K, G, d)
+    return out.reshape(B, 1, H, d).astype(q.dtype)
+
+
+def combine_partials(o_part, m_part, l_part):
+    """Log-sum-exp reduction over the split axis.
+
+    o_part: (B, K, splits, G, d); m_part, l_part: (B, K, splits, G).
+    Fully-dead splits carry (m=NEG_INF, l=0) and contribute nothing; a
+    row with NO live key anywhere returns zeros (matches the oracle's
+    zeroing of fully-masked rows).
+    """
+    m_star = m_part.max(axis=2)                            # (B, K, G)
+    alpha = jnp.exp(m_part - m_star[:, :, None])           # (B, K, s, G)
+    l_star = (l_part * alpha).sum(axis=2)                  # (B, K, G)
+    acc = (o_part * alpha[..., None]).sum(axis=2)          # (B, K, G, d)
+    return acc / jnp.maximum(l_star, 1e-30)[..., None]

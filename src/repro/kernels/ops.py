@@ -31,13 +31,40 @@ def _use_pallas() -> Optional[str]:
 
 def flash_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
                     softcap=None, chunk=1024):
+    """Backend-dispatched flash attention.
+
+    q: (B, S, H, d); k, v: (B, T, K, d) where K may be the NATIVE
+    kv-head count (GQA/MQA, H % K == 0) — callers no longer repeat K/V
+    to the full head count.  Single-token queries (S == 1, the serving
+    decode hot path) dispatch to the grouped split-KV flash-decode
+    kernel, which reads each K/V cache byte exactly once; everything
+    else takes the prefill/train flash path (grouped K/V expanded
+    shard-locally first).
+    """
     mode = _use_pallas()
-    if mode is not None and softcap is None:
+    if q.shape[1] == 1:
+        # decode: grouped split-KV kernel / pure-jnp twin (forward-only)
+        if mode is not None:
+            from repro.kernels.flash_decode import flash_decode_pallas
+            try:
+                return flash_decode_pallas(
+                    q, k, v, q_pos, k_pos, causal=causal, window=window,
+                    softcap=softcap, interpret=(mode == "interpret"))
+            except NotImplementedError:
+                pass
+        return _ref.flash_decode_ref(q, k, v, q_pos, k_pos, causal=causal,
+                                     window=window, softcap=softcap)
+    if k.shape[2] != q.shape[2]:
+        # grouped K/V on a multi-token path: expand to per-shard MHA
+        groups = q.shape[2] // k.shape[2]
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+    if mode is not None:
         from repro.kernels.flash_attention import flash_attention_pallas
         try:
             return flash_attention_pallas(
                 q, k, v, q_pos, k_pos, causal=causal, window=window,
-                interpret=(mode == "interpret"))
+                softcap=softcap, interpret=(mode == "interpret"))
         except NotImplementedError:
             pass
     return _ref.flash_attention_ref(q, k, v, q_pos, k_pos, causal=causal,

@@ -179,6 +179,60 @@ def attention_oracle(q, k, v, q_pos, k_pos, *, causal=True, window=None,
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def flash_decode_ref(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                     softcap=None):
+    """Grouped-KV decode attention — the pure-jnp twin of
+    ``kernels.flash_decode.flash_decode_pallas`` (production CPU path).
+
+    q: (B, S, H, d) with S small (decode passes S=1); k, v: (B, T, K, d)
+    at the NATIVE kv-head count (H % K == 0) — never repeated to H.
+    q_pos: (B, S) or (S,); k_pos: (B, T) int32 with -1 = empty slot;
+    ``window`` may be None, an int, or a traced scalar.
+
+    The ``vmem:flashdecode`` scope marks the region a single fused
+    kernel on TPU, so the while-aware HLO cost model charges only the
+    boundary traffic (q + grouped K/V + out) — the memory-bound optimum
+    the kernel achieves.  Fully-masked rows return zeros (matches
+    ``attention_oracle``).
+    """
+    B, S, H, d = q.shape
+    T, K = k.shape[1], k.shape[2]
+    assert H % K == 0, (H, K)
+    G = H // K
+    if window is None:
+        window = 1 << 30
+    window = jnp.asarray(window, jnp.int32)
+    scale = 1.0 / math.sqrt(d)
+    if q_pos.ndim == 1:
+        # (B,) per-row decode positions when S == 1 (the kernel's
+        # contract), else an (S,) stream shared across the batch
+        q_pos = (q_pos.reshape(B, 1) if S == 1 and q_pos.shape[0] == B
+                 else jnp.broadcast_to(q_pos, (B, S)))
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos, (B, T))
+
+    with jax.named_scope("vmem:flashdecode"):
+        qg = q.reshape(B, S, K, G, d)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        valid = (k_pos >= 0)[:, None, None, None, :]       # (B,1,1,1,T)
+        if causal:
+            valid = valid & (q_pos[:, None, None, :, None]
+                             >= k_pos[:, None, None, None, :])
+        valid = valid & ((q_pos[:, None, None, :, None]
+                          - k_pos[:, None, None, None, :]) < window)
+        s = jnp.where(valid, s, NEG_INF)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.where(valid, jnp.exp(s - m), 0.0)
+        l = p.sum(axis=-1, keepdims=True)                  # (B,K,G,S,1)
+        acc = jnp.einsum("bkgst,btkd->bkgsd", p.astype(q.dtype), v,
+                         preferred_element_type=jnp.float32)
+        out = acc / jnp.maximum(l, 1e-30)
+    return jnp.moveaxis(out, 3, 1).reshape(B, S, H, d).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # rmsnorm oracle
 def rmsnorm_ref(x, scale, eps=1e-6):

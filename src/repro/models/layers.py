@@ -136,10 +136,13 @@ def _mask(q_pos, k_pos, *, causal: bool, window: Optional[Any]):
 def _expand_kv(k: jax.Array, groups: int) -> jax.Array:
     """GQA -> per-shard MHA: repeat kv heads to the full head count.
 
-    Head h reads kv head h // groups (matches q's k*G+g grouping).  With
-    kv_heads replicated over `model` (rule fallback) and q heads sharded,
-    the repeat is shard-local — zero resharding, unlike the 5-D (K, G)
-    einsum which forced involuntary-remat copies (29 GB temps measured)."""
+    Multi-token train/prefill paths ONLY.  Head h reads kv head
+    h // groups (matches q's k*G+g grouping).  With kv_heads replicated
+    over `model` (rule fallback) and q heads sharded, the repeat is
+    shard-local — zero resharding, unlike the 5-D (K, G) einsum which
+    forced involuntary-remat copies (29 GB temps measured).  The cached
+    decode path never calls this anymore: it reads K/V grouped through
+    the split-KV flash-decode dispatch (groups× fewer HBM bytes)."""
     if groups == 1:
         return k
     return jnp.repeat(k, groups, axis=2)
@@ -275,31 +278,42 @@ def attention(
 
     if q_pos.ndim == 1:
         q_pos = jnp.broadcast_to(q_pos, (B, S))
+    if k_pos.ndim == 1:
+        k_pos_b = jnp.broadcast_to(k_pos, (B, T))
+    else:
+        k_pos_b = k_pos
 
-    # GQA -> per-shard MHA (see _expand_kv) keeps head sharding aligned.
-    k = _expand_kv(k, G)
-    v = _expand_kv(v, G)
-    k = constrain(k, "batch", None, "act_heads", None)
-    v = constrain(v, "batch", None, "act_heads", None)
-
-    if T > chunked_threshold:
-        # flash path: online-softmax fwd + score-recomputing custom-VJP bwd
-        # (repro.kernels.ref / repro.kernels.flash_attention on TPU)
+    if cache_kv is not None:
+        # Decode/cross with a populated cache: K/V stay GROUPED at the
+        # native kv-head count — no repeat materialization.  For S == 1
+        # (the serving decode hot path) ops.flash_attention dispatches
+        # to the grouped split-KV flash-decode kernel, which reads each
+        # cache byte from HBM exactly once (groups× fewer bytes than
+        # the retired repeat-then-attend path).
         from repro.kernels.ops import flash_attention
-        if k_pos.ndim == 1:
-            k_pos_b = jnp.broadcast_to(k_pos, (B, T))
-        else:
-            k_pos_b = k_pos
+        k = constrain(k, "batch", None, "cache_kv", None)
+        v = constrain(v, "batch", None, "cache_kv", None)
         out = flash_attention(q, k, v, q_pos, k_pos_b, causal=causal,
                               window=window, softcap=cfg.logit_softcap,
                               chunk=chunk)
     else:
-        if k_pos.ndim == 1:
-            k_pos_b = jnp.broadcast_to(k_pos, (B, T))
+        # GQA -> per-shard MHA (see _expand_kv) keeps head sharding
+        # aligned on the multi-token train/prefill paths.
+        k = _expand_kv(k, G)
+        v = _expand_kv(v, G)
+        k = constrain(k, "batch", None, "act_heads", None)
+        v = constrain(v, "batch", None, "act_heads", None)
+
+        if T > chunked_threshold:
+            # flash path: online-softmax fwd + score-recomputing
+            # custom-VJP bwd (repro.kernels.ref / flash_attention on TPU)
+            from repro.kernels.ops import flash_attention
+            out = flash_attention(q, k, v, q_pos, k_pos_b, causal=causal,
+                                  window=window, softcap=cfg.logit_softcap,
+                                  chunk=chunk)
         else:
-            k_pos_b = k_pos
-        mask = _mask(q_pos, k_pos_b, causal=causal, window=window)
-        out = _attend_dense(q, k, v, mask, cfg.logit_softcap)
+            mask = _mask(q_pos, k_pos_b, causal=causal, window=window)
+            out = _attend_dense(q, k, v, mask, cfg.logit_softcap)
 
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return constrain(y, "batch", None, "act_embed")

@@ -523,6 +523,10 @@ class DecoderModel:
         cache write — exact for uniform-length batches, e.g. the
         dry-run decode cells (which pass uniform ``positions`` only).
 
+        Attention reads the cache GROUPED (native kv-head count) through
+        the split-KV flash-decode dispatch in ``kernels.ops`` — no
+        repeat-to-full-head-count materialization on this path.
+
         Returns (logits (B, V), new_cache)."""
         cfg = self.cfg
         x = self._embed_inputs(params, batch)

@@ -570,6 +570,55 @@ def plan_from_layout(layout: Layout, *, rules: Optional[Rules] = None,
 
 
 # ---------------------------------------------------------------------------
+# HLO probe cache — measured lowerings are expensive (minutes of XLA
+# compile on 512 fake devices); key them by everything that changes the
+# compiled module and reuse across planner invocations.
+def _probe_cache_dir(override=None):
+    import pathlib
+    if override is not None:
+        return pathlib.Path(override)
+    return pathlib.Path(os.environ.get("REPRO_HLO_PROBE_CACHE",
+                                       "experiments/hlo_probes"))
+
+
+def _probe_key(probe_arch: str, shape, layout: Layout) -> str:
+    """(config, shape, layout, jax version) — a new jax can lower the
+    same cell differently, so measured totals are version-scoped.  The
+    shape key spells out seq/batch/kind (two shapes sharing a ``name``
+    must not alias); ``probe_arch`` is the registry name — re-registering
+    a DIFFERENT config under the same name needs ``probe_cache=False``
+    or a fresh cache dir."""
+    import jax
+    shape_id = (f"{shape.name}-s{shape.seq_len}-b{shape.global_batch}"
+                f"-{shape.kind.value}" if isinstance(shape, ShapeConfig)
+                else str(shape))
+    layout_id = (f"pod{layout.pod}-data{layout.data}-model{layout.model}"
+                 f"-pipe{layout.pipe}"
+                 + ("x" if layout.pipe_spans_pods else ""))
+    return f"{probe_arch}_{shape_id}_{layout_id}_jax{jax.__version__}"
+
+
+def _probe_load(path) -> Optional[Tuple[float, float, float]]:
+    try:
+        d = json.loads(path.read_text())
+        return (float(d["flops"]), float(d["bytes_accessed"]),
+                float(d["coll_bytes"]))
+    except (OSError, ValueError, KeyError):
+        return None
+
+
+def _probe_store(path, flops: float, bytes_accessed: float,
+                 coll_bytes: float):
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"flops": flops, "bytes_accessed": bytes_accessed,
+             "coll_bytes": coll_bytes}, indent=1))
+    except OSError as e:                    # read-only checkout: probe
+        warnings.warn(f"hlo probe cache write failed: {e}")  # still valid
+
+
+# ---------------------------------------------------------------------------
 # The auto-planner
 _OBJECTIVES = ("balanced", "min_cross_pod_bytes", "min_step_time")
 
@@ -583,7 +632,9 @@ def plan_parallelism(model_cfg: ModelConfig, *, chips: int,
                      hlo_probe: bool = False,
                      probe_arch: Optional[str] = None,
                      probe_shape=None,
-                     probe_top_k: int = 2) -> ParallelPlan:
+                     probe_top_k: int = 2,
+                     probe_cache: bool = True,
+                     probe_cache_dir=None) -> ParallelPlan:
     """Map (model config × chip count × fabric) → the best ParallelPlan.
 
     Enumerates candidate layouts, scores each with the fabric/collectives
@@ -592,6 +643,12 @@ def plan_parallelism(model_cfg: ModelConfig, *, chips: int,
     top-``probe_top_k`` finalists are actually lowered (``probe_arch`` ×
     ``probe_shape`` on this process's devices) and re-ranked with
     while-aware HLO cost totals — the compiled step, not just the model.
+
+    Measured probes are cached as JSON under ``probe_cache_dir``
+    (default ``$REPRO_HLO_PROBE_CACHE`` or ``experiments/hlo_probes/``),
+    keyed by (probe config, probe shape, layout, jax version), and
+    reused instead of recompiling finalists on every invocation; pass
+    ``probe_cache=False`` to force fresh lowering.
     """
     if objective not in _OBJECTIVES:
         raise ValueError(f"objective {objective!r} not in {_OBJECTIVES}")
@@ -624,21 +681,33 @@ def plan_parallelism(model_cfg: ModelConfig, *, chips: int,
             "by launch.cells.build_cell; register reduced configs via "
             "repro.configs.register_config)")
     if hlo_probe:
-        import jax
-        if jax.device_count() < chips:
-            raise ValueError(
-                f"hlo_probe needs >= {chips} devices (have "
-                f"{jax.device_count()}); run under "
-                f"XLA_FLAGS=--xla_force_host_platform_device_count={chips}")
+        cache_dir = _probe_cache_dir(probe_cache_dir)
+        sh = probe_shape if probe_shape is not None else shape
         probed = []
         for s in scores[:probe_top_k]:
-            plan_i = plan_from_layout(s.layout, rules=rules, fabric=fabric)
-            totals = plan_i.hlo_cost(probe_arch,
-                                     probe_shape if probe_shape is not None
-                                     else shape)
+            cache_path = cache_dir / f"{_probe_key(probe_arch, sh, s.layout)}.json"
+            cached = _probe_load(cache_path) if probe_cache else None
+            if cached is not None:
+                flops, bytes_accessed, coll = cached
+            else:
+                import jax
+                if jax.device_count() < chips:
+                    raise ValueError(
+                        f"hlo_probe needs >= {chips} devices (have "
+                        f"{jax.device_count()}); run under "
+                        f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                        f"{chips} (or warm {cache_dir} on a host that has "
+                        "them)")
+                plan_i = plan_from_layout(s.layout, rules=rules,
+                                          fabric=fabric)
+                totals = plan_i.hlo_cost(probe_arch, sh)
+                flops, bytes_accessed = totals.flops, totals.bytes_accessed
+                coll = float(totals.collective_total)
+                if probe_cache:
+                    _probe_store(cache_path, flops, bytes_accessed, coll)
             probed.append(dataclasses.replace(
-                s, hlo_flops=totals.flops, hlo_bytes=totals.bytes_accessed,
-                hlo_coll_bytes=float(totals.collective_total)))
+                s, hlo_flops=flops, hlo_bytes=bytes_accessed,
+                hlo_coll_bytes=coll))
         # re-rank probed finalists by compiled-step roofline bound
         def hlo_key(s: LayoutScore):
             t = max(s.hlo_flops / CHIP.peak_bf16_flops,

@@ -11,7 +11,12 @@ Compilation discipline: the decode hot path is ONE jitted
 ``generate_step`` whose signature is all-array — tokens, per-slot
 positions, and the packed per-slot sampling params (temperature / top-k
 / top-p / seed / step).  Changing a request's sampling config therefore
-never retriggers compilation.  Prefill compiles once per prompt-length
+never retriggers compilation.  Inside that step the single-token
+attention dispatches to the grouped split-KV flash-decode kernel
+(``repro.kernels.flash_decode``; jnp twin on CPU): K/V stay at the
+native kv-head count and every live cache byte is read once per tick —
+the memory-bound optimum — with per-slot ring positions and -1 empty
+slots masked in-kernel.  Prefill compiles once per prompt-length
 bucket (``prefill_chunk`` rounds lengths up; pure-global-attention archs
 only — ring buffers and SSM state cannot mask pad tokens).
 

@@ -53,6 +53,45 @@ def test_flash_pallas_empty_slots_masked():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
 
 
+@pytest.mark.parametrize("softcap", [10.0, 30.0])
+@pytest.mark.parametrize("window", [None, 32])
+def test_flash_pallas_softcap_vs_oracle(softcap, window):
+    """Gemma-style tanh score cap runs IN the Pallas kernel now (no more
+    silent ref fallback for softcap configs)."""
+    B, S, H, d = 2, 128, 2, 32
+    q, k, v = _qkv(B, S, H, d, jnp.float32, seed=5)
+    qp = jnp.broadcast_to(jnp.arange(S), (B, S))
+    got = flash_attention_pallas(q, k, v, qp, qp, softcap=softcap,
+                                 window=window, block_q=32, block_k=32,
+                                 interpret=True)
+    want = attention_oracle(q, k, v, qp, qp, softcap=softcap, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ops_flash_attention_softcap_uses_pallas(monkeypatch):
+    """ops.flash_attention must not drop to the ref path anymore when a
+    softcap is set and Pallas is forced."""
+    from repro.kernels import flash_attention as fa_mod
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "interpret")
+    called = {}
+    orig = fa_mod.flash_attention_pallas
+
+    def spy(*a, **kw):
+        called["pallas"] = True
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(fa_mod, "flash_attention_pallas", spy)
+    B, S, H, d = 1, 64, 2, 16
+    q, k, v = _qkv(B, S, H, d, jnp.float32, seed=6)
+    qp = jnp.broadcast_to(jnp.arange(S), (B, S))
+    got = ops.flash_attention(q, k, v, qp, qp, softcap=15.0)
+    assert called.get("pallas"), "softcap call fell back to the ref path"
+    want = attention_oracle(q, k, v, qp, qp, softcap=15.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
 @pytest.mark.parametrize("softcap", [None, 20.0])
 @pytest.mark.parametrize("window", [None, 24])
 def test_flash_ref_grads_vs_oracle(softcap, window):

@@ -306,3 +306,45 @@ def test_serve_cli_plan_flag():
     p = build_parser()
     assert p.parse_args(["--plan", "single-pod"]).plan == "single-pod"
     assert p.parse_args([]).plan is None
+
+
+# ---------------------------------------------------------------------------
+# HLO probe cache: measured probes persist under (config, shape, layout,
+# jax version) keys and are reused instead of recompiling finalists
+def test_hlo_probe_cache_reuses_measurements(tmp_path, monkeypatch):
+    import jax
+
+    from repro.core.hlo_cost import CostTotals
+    from repro.parallel import plan as plan_mod
+
+    calls = []
+
+    def fake_hlo_cost(self, arch, shape, *, rules=None):
+        calls.append(arch)
+        return CostTotals(flops=1.5e12, bytes_accessed=2.5e9,
+                          coll_bytes={"all-reduce": 3.5e9})
+
+    monkeypatch.setattr(plan_mod.ParallelPlan, "hlo_cost", fake_hlo_cost)
+    monkeypatch.setattr(jax, "device_count", lambda: 512)
+
+    cfg = get_config("qwen3-32b")
+    kw = dict(chips=512, hlo_probe=True, probe_arch="qwen3-32b",
+              probe_top_k=2, probe_cache_dir=tmp_path)
+    p1 = plan_parallelism(cfg, **kw)
+    assert len(calls) == 2                      # both finalists lowered
+    files = sorted(f.name for f in tmp_path.glob("*.json"))
+    assert len(files) == 2
+    assert all(f"jax{jax.__version__}" in f for f in files)
+
+    p2 = plan_parallelism(cfg, **kw)
+    assert len(calls) == 2                      # cache hit: no recompiles
+
+    def probed(plan):
+        return [(str(s.layout), s.hlo_flops, s.hlo_bytes, s.hlo_coll_bytes)
+                for s in plan.scorecard.scores if s.hlo_bytes is not None]
+    assert probed(p1) == probed(p2)
+    assert probed(p1)[0][1:] == (1.5e12, 2.5e9, 3.5e9)
+    assert p1.mesh_shape == p2.mesh_shape
+
+    plan_parallelism(cfg, **{**kw, "probe_cache": False})
+    assert len(calls) == 4                      # cache bypassed on demand
