@@ -99,12 +99,18 @@ class CheckpointManager:
         self.keep = keep
         self.process_index = process_index
         self._observers: List[Callable[[int], None]] = []
+        self._drain_observers: List[Callable[[int], None]] = []
         self._pending: Optional[threading.Thread] = None
         self._lock = threading.Lock()
 
     # -- events (checkpoint-completion => safe preemption points, §8.5) --
     def add_completion_observer(self, fn: Callable[[int], None]):
         self._observers.append(fn)
+
+    def add_drain_observer(self, fn: Callable[[int], None]):
+        """Called after a :meth:`drain` barrier commits — the safe point
+        at which the runtime may tear down the mesh (§8.7 node drain)."""
+        self._drain_observers.append(fn)
 
     def _notify(self, step: int):
         for fn in self._observers:
@@ -157,6 +163,16 @@ class CheckpointManager:
             self._pending = None
         if t is not None:
             t.join()
+
+    def drain(self, step: int, state, extra: Optional[Dict] = None):
+        """Drain barrier (§8.7): flush any in-flight async save, write a
+        *blocking* checkpoint at ``step``, and notify drain observers.
+        After this returns, the training state is durable and the caller
+        may safely drop devices / rebuild the mesh."""
+        self.wait()
+        self.save(step, state, extra=extra, blocking=True)
+        for fn in self._drain_observers:
+            fn(step)
 
     def _gc(self):
         steps = self.all_steps()

@@ -27,6 +27,7 @@ class RunTelemetry:
         self._t_last = time.time()
         self._fh = self.path.open("a") if self.path else None
         self.records = []
+        self.recovery_records: List[Dict] = []
         self.flops_per_token = cfg.flops_per_token()
 
     def step(self, step: int, metrics: Dict):
@@ -49,6 +50,48 @@ class RunTelemetry:
             self._fh.write(json.dumps(rec) + "\n")
             self._fh.flush()
         return rec
+
+    def recovery(self, step: int, *, time_to_recover_s: float,
+                 lost_steps: int, chips_before: int, chips_after: int,
+                 policy: str, component: str = "", plan: str = "") -> Dict:
+        """Record one fault-recovery cycle (§8.7: drain → re-plan →
+        resharded resume).  ``lost_steps`` is the work rolled back (0 for
+        a drained soft fault); ``time_to_recover_s`` spans re-plan +
+        resharded restore.  Subsequent MFU is computed against the
+        surviving chip count."""
+        rec = {
+            "event": "recovery",
+            "step": step,
+            "time": time.time(),
+            "time_to_recover_s": time_to_recover_s,
+            "lost_steps": lost_steps,
+            "lost_tokens": lost_steps * self.shape.tokens_per_step,
+            "chips_before": chips_before,
+            "chips_after": chips_after,
+            "policy": policy,
+            "component": component,
+            "plan": plan,
+        }
+        self.recovery_records.append(rec)
+        self.n_chips = chips_after
+        self._t_last = time.time()      # don't bill recovery to a step
+        if self._fh:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+        return rec
+
+    def recovery_summary(self) -> Dict:
+        """Aggregate recovery stats: events, total downtime, lost work."""
+        if not self.recovery_records:
+            return {}
+        return {
+            "recoveries": len(self.recovery_records),
+            "total_recovery_s": sum(r["time_to_recover_s"]
+                                    for r in self.recovery_records),
+            "total_lost_steps": sum(r["lost_steps"]
+                                    for r in self.recovery_records),
+            "chips_final": self.recovery_records[-1]["chips_after"],
+        }
 
     def utilization_summary(self, low_threshold_mfu: float = 0.05) -> Dict:
         """Observation-3-style per-job stats from the step records."""

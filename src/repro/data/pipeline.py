@@ -174,3 +174,11 @@ class Prefetcher:
 
     def close(self):
         self._done = True
+        # unblock a producer stuck in q.put on the bounded queue so the
+        # thread can observe _done and exit (otherwise every close leaks
+        # a live thread plus whatever the iterator captured)
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break

@@ -1,68 +1,32 @@
-"""Elastic scaling / fault recovery for real runs (paper §8.7 lesson 4).
+"""Deprecated: elastic scaling collapsed into :mod:`repro.train.runtime`.
 
-On a node failure the paper drains the node and restarts; at framework
-level that means: detect the shrunken device set, rebuild the mesh with a
-smaller ``data`` axis, and restore the last checkpoint resharded onto the
-new mesh — parameters are stored shard-agnostically (full logical arrays
-per leaf), so restore-with-new-sharding is just load + device_put with
-the new NamedShardings.
-
-``shrink_data_axis`` computes the largest valid mesh after losing nodes;
-``reshard_restore`` performs the checkpoint reload.  Exercised by
-tests/distributed/test_elastic.py on fake devices.
+The §8.7 fault-recovery helpers that lived here (``shrink_data_axis``,
+``make_elastic_mesh``, ``reshard_restore``) are now part of the elastic
+training runtime, which drives them from an event-driven state machine
+(drain → re-plan → resharded resume) instead of leaving the loop to the
+caller.  The public names are unchanged and re-exported here; new code
+should use ``repro.train.runtime`` (``Trainer``, ``FaultMonitor``,
+``reshard_restore``) and ``repro.parallel.plan.replan`` for full
+re-planning instead of data-axis-only shrinking.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+import warnings
 
-import jax
-import numpy as np
-from jax.sharding import Mesh, NamedSharding
-
-from repro.checkpoint import CheckpointManager
-from repro.parallel.sharding import spec_tree_for_params
+_NAMES = ("shrink_data_axis", "make_elastic_mesh", "reshard_restore")
 
 
-def shrink_data_axis(n_devices: int, model_parallel: int,
-                     pod: Optional[int] = None) -> Tuple[Tuple[int, ...],
-                                                         Tuple[str, ...]]:
-    """Largest (pod?, data, model) mesh that fits the surviving devices.
-
-    The model axis is preserved (TP groups must stay intact — losing one
-    member of a TP group invalidates the whole group, so capacity shrinks
-    in units of ``model_parallel`` devices, the paper's node-granularity
-    drain generalized to TP-group granularity)."""
-    groups = n_devices // model_parallel
-    if groups < 1:
-        raise ValueError("not enough devices for one model-parallel group")
-    if pod and groups % pod == 0 and groups // pod > 1:
-        return (pod, groups // pod, model_parallel), ("pod", "data", "model")
-    return (groups, model_parallel), ("data", "model")
+def __getattr__(name: str):
+    if name in _NAMES:
+        warnings.warn(
+            f"repro.launch.elastic.{name} is deprecated; import it from "
+            "repro.train.runtime (the elastic runtime also adds Trainer/"
+            "FaultMonitor and full re-planning via parallel.plan.replan)",
+            DeprecationWarning, stacklevel=2)
+        from repro.train import runtime
+        return getattr(runtime, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def make_elastic_mesh(model_parallel: int, devices=None,
-                      pod: Optional[int] = None) -> Mesh:
-    devices = devices if devices is not None else jax.devices()
-    shape, axes = shrink_data_axis(len(devices), model_parallel, pod)
-    n = int(np.prod(shape))
-    arr = np.asarray(devices[:n]).reshape(shape)
-    return Mesh(arr, axes)
-
-
-def reshard_restore(mgr: CheckpointManager, abstract_state, axes_tree,
-                    mesh: Mesh, step: Optional[int] = None):
-    """Restore the latest checkpoint onto a (possibly different) mesh."""
-    host_state, extra, step = mgr.restore(abstract_state, step)
-    shardings = spec_tree_for_params(abstract_state, axes_tree, mesh)
-
-    def put(x, sh):
-        if sh is None:
-            return jax.device_put(x)
-        return jax.device_put(x, sh)
-
-    from repro.parallel.sharding import LogicalAxes
-    state = jax.tree.map(put, host_state, shardings,
-                         is_leaf=lambda t: not isinstance(t, (dict, list,
-                                                              tuple))
-                         or isinstance(t, LogicalAxes))
-    return state, extra, step
+def __dir__():
+    return sorted(list(globals()) + list(_NAMES))

@@ -1,36 +1,38 @@
-"""End-to-end training driver.
+"""End-to-end training driver — a thin CLI over the elastic runtime.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b \
         --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
 
-Wires every substrate together: config registry -> model -> data pipeline
-(packed, prefetched) -> train_step (AdamW, clip, remat) -> checkpoint
-manager (async, atomic, preemption events) -> telemetry.  ``--restore``
-resumes exactly (including the data-pipeline cursor).  ``--plan`` picks
-the parallelism layout (repro.parallel.plan): on a real TPU cluster the
-same driver runs under jax.distributed with the production plan; on this
-container it runs reduced configs on CPU (or fake devices via XLA_FLAGS).
+The step loop itself lives in :class:`repro.train.runtime.Trainer`: an
+event-driven state machine (INIT → RUNNING → DRAINING → REPLANNING →
+RESTORING → RUNNING) that wires every substrate together — config
+registry -> model -> data pipeline (packed, cursor-checkpointed) ->
+train_step (AdamW, clip, remat, grad compression) -> checkpoint manager
+(async, atomic, drain barrier) -> telemetry (steps + recoveries) — and
+survives node loss by re-planning the parallelism layout over the
+surviving devices and resuming from a resharded checkpoint (paper §8.7).
+
+``--restore`` resumes exactly (including the data-pipeline cursor).
+``--plan`` picks the parallelism layout (repro.parallel.plan).
+``--fault-at step:node`` injects device-loss events (fake devices;
+``--gpus-per-node`` sets the failure-domain size) and ``--recovery``
+picks the policy: ``replan`` (full auto re-plan) or ``shrink``
+(legacy data-axis shrink).
 """
 from __future__ import annotations
 
 import argparse
-import contextlib
 import sys
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.core.config import (OptimizerConfig, ParallelConfig, RunConfig,
                                ShapeConfig, StepKind)
-from repro.checkpoint import CheckpointManager
-from repro.data import PackedPipeline, Prefetcher
-from repro.models.model import build_model
+from repro.core.telemetry import RunTelemetry
 from repro.parallel.plan import resolve_plan
-from repro.train.step import (init_train_state, make_train_step,
-                              train_state_logical_axes)
+from repro.train.runtime import (DevicePool, FaultMonitor, LoggingCallback,
+                                 Trainer)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -58,8 +60,34 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--telemetry", default="",
-                    help="JSONL path for step telemetry (loss, tok/s, MFU)")
+                    help="JSONL path for step + recovery telemetry")
+    # -- elastic runtime knobs (§8.7 fault-recovery loop) ----------------
+    ap.add_argument("--recovery", default="replan",
+                    choices=("replan", "shrink"),
+                    help="post-fault policy: full auto re-plan vs legacy "
+                         "data-axis shrink")
+    ap.add_argument("--fault-at", default="",
+                    help="inject node losses: step:node[,step:node...] "
+                         "(drain semantics; prefix step with '!' for a "
+                         "hard fault that rolls back to the last ckpt)")
+    ap.add_argument("--gpus-per-node", type=int, default=0,
+                    help="failure-domain size for --fault-at "
+                         "(default: all devices = one node)")
     return ap
+
+
+def parse_fault_spec(spec: str) -> FaultMonitor:
+    """``step:node[,step:node...]`` with optional ``!step`` = hard."""
+    events = []
+    for part in spec.split(","):
+        s, _, n = part.partition(":")
+        s = s.strip()
+        hard = s.startswith("!")
+        events.append((int(s.lstrip("!")), int(n), hard))
+    mon = FaultMonitor()
+    for step, node, hard in events:
+        mon.inject(step, node, component="operator", hard=hard)
+    return mon
 
 
 def main(argv=None) -> int:
@@ -85,65 +113,32 @@ def main(argv=None) -> int:
         else:
             print(plan.describe(), flush=True)
 
-    with contextlib.ExitStack() as scope:
-        mesh = scope.enter_context(plan.activate()) \
-            if plan is not None else None
-        return _run(args, cfg, shape, run_cfg, plan, mesh)
-
-
-def _run(args, cfg, shape, run_cfg, plan, mesh) -> int:
-    model = build_model(cfg, remat=args.remat)
-    state = init_train_state(model, run_cfg, jax.random.key(args.seed))
-    if plan is not None:
-        state = jax.device_put(
-            state, plan.shardings(state,
-                                  train_state_logical_axes(model, run_cfg),
-                                  mesh=mesh))
-    step_fn = jax.jit(make_train_step(model, run_cfg))
-    pipe = PackedPipeline(cfg, shape, seed=args.seed)
-
-    start_step = 0
-    mgr = None
-    if args.ckpt_dir:
-        mgr = CheckpointManager(args.ckpt_dir, keep=2)
-        mgr.add_completion_observer(
-            lambda s: print(f"[ckpt] step {s} committed "
-                            f"(safe preemption point)", flush=True))
-        if args.restore and mgr.latest_step() is not None:
-            state, extra, start_step = mgr.restore(state)
-            pipe.restore(extra["pipeline"])
-            print(f"[restore] resumed from step {start_step}", flush=True)
-
-    from repro.core.telemetry import RunTelemetry
+    pool = DevicePool(gpus_per_node=args.gpus_per_node)
     telem = RunTelemetry(args.telemetry or None, cfg, shape,
-                         n_chips=len(jax.devices()))
-    it = Prefetcher(iter(pipe), depth=2)
-    losses = []
-    t0 = time.time()
-    for step in range(start_step, args.steps):
-        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-        state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])
-        losses.append(loss)
-        telem.step(step, metrics)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            print(f"step {step:5d} loss {loss:8.4f} "
-                  f"gnorm {float(metrics['grad_norm']):8.3f} "
-                  f"lr {float(metrics['lr']):.2e} "
-                  f"({(time.time()-t0):6.1f}s)", flush=True)
-        if mgr and (step + 1) % args.ckpt_every == 0:
-            mgr.save(step + 1, state, extra={"pipeline": pipe.state()},
-                     blocking=False)
-    if mgr:
-        mgr.wait()
-    it.close()
-    telem.close()
+                         n_chips=plan.chips if plan else len(jax.devices()))
+    trainer = Trainer(
+        run_cfg, plan=plan, pool=pool,
+        callbacks=[LoggingCallback(every=args.log_every)],
+        telemetry=telem,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        restore=args.restore,
+        fault_monitor=parse_fault_spec(args.fault_at) if args.fault_at
+        else None,
+        recovery=args.recovery)
+    report = trainer.run(args.steps)
+
     summ = telem.utilization_summary()
     if summ:
         print(f"telemetry: mean_mfu={summ['mean_mfu']:.4f} "
               f"low_util_fraction={summ['low_util_fraction']:.2f}")
-    ok = losses[-1] < losses[0]
-    print(f"final: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+    rsum = telem.recovery_summary()
+    if rsum:
+        print(f"recoveries: {rsum['recoveries']} "
+              f"(lost {rsum['total_lost_steps']} steps, "
+              f"{rsum['total_recovery_s']:.2f}s downtime, "
+              f"{rsum['chips_final']} chips final)")
+    ok = report.improved
+    print(f"final: loss {report.losses[0]:.4f} -> {report.losses[-1]:.4f} "
           f"({'improved' if ok else 'NOT improved'})")
     return 0 if ok else 1
 

@@ -182,6 +182,7 @@ class LayoutScore:
     feasible: bool
     fallbacks: Tuple[str, ...]       # logical dims that replicate (rule
     schedule: CollectiveSchedule = CollectiveSchedule()      # fallback)
+    vp: int = 1                      # chosen virtual-pipeline interleaving
     hlo_flops: Optional[float] = None        # per-device, from HLO probe
     hlo_bytes: Optional[float] = None
     hlo_coll_bytes: Optional[float] = None
@@ -194,7 +195,8 @@ class LayoutScore:
                 f"rail={self.rail_bytes_per_gpu / 1e9:8.2f}GB/gpu "
                 f"step={self.step_s:7.3f}s dcqcn={self.dcqcn_factor:4.2f} "
                 f"{'ok ' if self.feasible else 'OOM'}"
-                f"{probe}"
+                + (f" vp={self.vp}" if self.vp > 1 else "")
+                + f"{probe}"
                 + (f" fallbacks={','.join(self.fallbacks)}"
                    if self.fallbacks else ""))
 
@@ -232,11 +234,20 @@ def _sharding_fallbacks(cfg: ModelConfig, shape: ShapeConfig, layout: Layout,
 def score_layout(cfg: ModelConfig, shape: ShapeConfig, layout: Layout,
                  *, fabric: FabricSpec = FABRIC,
                  schedule: Optional[CollectiveSchedule] = None,
-                 rules: Optional[Rules] = None) -> LayoutScore:
+                 rules: Optional[Rules] = None,
+                 interleave: bool = True) -> LayoutScore:
     """Score one candidate layout with the fabric analytical model.
 
     All byte formulas are per *training* step (the shape's kind scales
-    FLOPs; serving steps have no gradient reduction)."""
+    FLOPs; serving steps have no gradient reduction).
+
+    With ``interleave=True`` (default) pipelined layouts are scored with
+    the best interleaved-1F1B virtual-pipelining factor ``vp`` (layer
+    chunks per device): the bubble shrinks to ``(p-1)/(vp·m + p-1)`` but
+    every microbatch crosses each stage boundary ``vp`` times, so the
+    stage-boundary activation traffic scales ×``vp`` — the planner trades
+    the two instead of assuming plain GPipe (which over-penalized
+    deep-pipe layouts)."""
     rules = rules if rules is not None else _DEFAULT_RULES
     if schedule is None:
         schedule = CollectiveSchedule(
@@ -269,33 +280,30 @@ def score_layout(cfg: ModelConfig, shape: ShapeConfig, layout: Layout,
         rail += ((4 if train else 2) * local_tokens
                  * cfg.num_experts_per_tok * cfg.d_model * ACT_WIRE_BYTES
                  * (layout.model - 1) / layout.model)
+    pipe_rail_unit = 0.0
     if layout.pipe > 1 and not layout.pipe_spans_pods:
-        # stage-boundary activations stay on intra-pod rails
-        rail += ((2 if train else 1) * local_tokens * cfg.d_model
-                 * ACT_WIRE_BYTES)
-    rail_s = rail / (fabric.nic_bw * RAIL_EFFICIENCY)
+        # stage-boundary activations stay on intra-pod rails (×vp under
+        # interleaving — every microbatch visits each device vp times)
+        pipe_rail_unit = ((2 if train else 1) * local_tokens * cfg.d_model
+                          * ACT_WIRE_BYTES)
 
     # --- cross-pod spine traffic, total --------------------------------
     spans = layout.pod > 1 or layout.pipe_spans_pods
-    cross = 0.0
+    cross_base, pipe_cross_unit = 0.0, 0.0
     if spans and layout.pipe_spans_pods:
-        # activation p2p at the one stage boundary on the pod cut
-        cross = ((2 if train else 1) * tokens * cfg.d_model
-                 * ACT_WIRE_BYTES)
+        # activation p2p at the one stage boundary on the pod cut (×vp)
+        pipe_cross_unit = ((2 if train else 1) * tokens * cfg.d_model
+                           * ACT_WIRE_BYTES)
     elif spans and train:
         if schedule.hierarchical:
-            cross = (2 * (layout.pod - 1) / layout.pod * param_bytes
-                     * _COMPRESS_FACTOR.get(schedule.compress, 1.0))
+            cross_base = (2 * (layout.pod - 1) / layout.pod * param_bytes
+                          * _COMPRESS_FACTOR.get(schedule.compress, 1.0))
         else:
             # flat ring over pod×data: ~2·G per ring link, `pods` cut
             # links per ring, model·pipe rings
-            cross = 2 * grad_shard * layout.pod * layout.model * layout.pipe
+            cross_base = (2 * grad_shard * layout.pod * layout.model
+                          * layout.pipe)
     bisection = fabric.leaf_per_pod * fabric.spines * fabric.leaf_spine_bw
-    dcqcn = 1.0
-    if cross > 0:
-        offered = (chips / fabric.pods) * fabric.nic_bw / bisection
-        dcqcn = dcqcn_throughput_factor(offered, fabric)
-    spine_s = cross / (bisection * dcqcn) if cross else 0.0
 
     # --- memory feasibility ---------------------------------------------
     state_mult = 4.0 if train else 0.5            # p+g+2×adam | bf16 params
@@ -305,13 +313,33 @@ def score_layout(cfg: ModelConfig, shape: ShapeConfig, layout: Layout,
         * ACT_WIRE_BYTES * 8                      # live activation estimate
     feasible = hbm < CHIP.hbm_bytes
 
-    bubble = 0.0
-    if layout.pipe > 1:
-        bubble = PipelineSpec(stages=layout.pipe,
-                              microbatches=max(8, 2 * layout.pipe)
-                              ).bubble_fraction
-    comm_s = rail_s + spine_s
-    step_s = (compute_s + (1.0 - OVERLAP) * comm_s) / max(1.0 - bubble, 1e-9)
+    # --- interleaved-1F1B vp search over bubble vs boundary traffic -----
+    micro = max(8, 2 * layout.pipe)
+    vp_opts = [1]
+    if layout.pipe > 1 and interleave:
+        vp_opts = [v for v in (1, 2, 3, 4)
+                   if cfg.num_layers % (layout.pipe * v) == 0] or [1]
+    best = None
+    for vp in vp_opts:
+        rail_v = rail + pipe_rail_unit * vp
+        cross_v = cross_base + pipe_cross_unit * vp
+        rail_s = rail_v / (fabric.nic_bw * RAIL_EFFICIENCY)
+        dcqcn = 1.0
+        if cross_v > 0:
+            offered = (chips / fabric.pods) * fabric.nic_bw / bisection
+            dcqcn = dcqcn_throughput_factor(offered, fabric)
+        spine_s = cross_v / (bisection * dcqcn) if cross_v else 0.0
+        bubble = 0.0
+        if layout.pipe > 1:
+            bubble = PipelineSpec(stages=layout.pipe, vp=vp,
+                                  microbatches=micro).bubble_fraction
+        comm_s = rail_s + spine_s
+        step_s = ((compute_s + (1.0 - OVERLAP) * comm_s)
+                  / max(1.0 - bubble, 1e-9))
+        cand = (step_s, vp, rail_v, cross_v, rail_s, spine_s, dcqcn)
+        if best is None or cand[0] < best[0]:
+            best = cand
+    step_s, vp, rail, cross, rail_s, spine_s, dcqcn = best
 
     return LayoutScore(
         layout=layout, cross_pod_bytes=cross, rail_bytes_per_gpu=rail,
@@ -320,7 +348,7 @@ def score_layout(cfg: ModelConfig, shape: ShapeConfig, layout: Layout,
         rail_utilization=min(rail_s / step_s, 1.0) if step_s else 0.0,
         hbm_per_gpu=hbm, feasible=feasible,
         fallbacks=_sharding_fallbacks(cfg, shape, layout, rules),
-        schedule=schedule)
+        schedule=schedule, vp=vp)
 
 
 def naive_production_layout(chips: int,
@@ -548,14 +576,14 @@ class ParallelPlan:
 
 def plan_from_layout(layout: Layout, *, rules: Optional[Rules] = None,
                      fabric: FabricSpec = FABRIC, name: str = "custom",
-                     compress: str = "none",
+                     compress: str = "none", vp: int = 1,
                      score: Optional[LayoutScore] = None,
                      scorecard: Optional[PlanScorecard] = None
                      ) -> ParallelPlan:
     shape, axes = layout.mesh_tuple()
     pipeline = None
     if layout.pipe > 1:
-        pipeline = PipelineSpec(stages=layout.pipe,
+        pipeline = PipelineSpec(stages=layout.pipe, vp=vp,
                                 microbatches=max(8, 2 * layout.pipe),
                                 spans_pods=layout.pipe_spans_pods)
     collectives = CollectiveSchedule(
@@ -629,6 +657,7 @@ def plan_parallelism(model_cfg: ModelConfig, *, chips: int,
                      shape: Optional[ShapeConfig] = None,
                      rules: Optional[Rules] = None,
                      compress: str = "none",
+                     exclude_nodes: Sequence[int] = (),
                      hlo_probe: bool = False,
                      probe_arch: Optional[str] = None,
                      probe_shape=None,
@@ -649,11 +678,22 @@ def plan_parallelism(model_cfg: ModelConfig, *, chips: int,
     keyed by (probe config, probe shape, layout, jax version), and
     reused instead of recompiling finalists on every invocation; pass
     ``probe_cache=False`` to force fresh lowering.
+
+    ``exclude_nodes`` marks failed/drained nodes (paper §8.7): the
+    fabric model shrinks by that many nodes (less pod capacity, same
+    pod count), and ``chips`` must already be the surviving chip count
+    — the elastic runtime passes both after a device loss.
     """
     if objective not in _OBJECTIVES:
         raise ValueError(f"objective {objective!r} not in {_OBJECTIVES}")
     shape = shape if shape is not None else SHAPES["train_4k"]
     rules = rules if rules is not None else default_rules()
+    if exclude_nodes:
+        lost = len(set(exclude_nodes))
+        if lost >= fabric.nodes:
+            raise ValueError(f"excluding {lost} of {fabric.nodes} nodes "
+                             "leaves no capacity")
+        fabric = dataclasses.replace(fabric, nodes=fabric.nodes - lost)
 
     layouts = enumerate_layouts(model_cfg, chips, fabric)
     scores = [score_layout(model_cfg, shape, l, fabric=fabric, rules=rules,
@@ -728,7 +768,40 @@ def plan_parallelism(model_cfg: ModelConfig, *, chips: int,
                          naive=naive)
     return plan_from_layout(chosen.layout, rules=rules, fabric=fabric,
                             name=f"auto/{objective}", compress=compress,
-                            score=chosen, scorecard=card)
+                            vp=chosen.vp, score=chosen, scorecard=card)
+
+
+def replan(plan: ParallelPlan, model_cfg: ModelConfig, *,
+           exclude_nodes: Sequence[int] = (),
+           chips: Optional[int] = None,
+           shape: Optional[ShapeConfig] = None,
+           objective: str = "balanced",
+           fabric: Optional[FabricSpec] = None) -> ParallelPlan:
+    """Full re-plan after node loss (§8.7) — the elastic upgrade over
+    ``shrink_data_axis``.
+
+    Re-runs the auto-planner over the surviving chip count with the
+    failed nodes excluded from the fabric model, carrying the old plan's
+    rule table and wire compression.  Unlike the legacy data-axis shrink,
+    every axis is back on the table: the planner may trade model/pipe
+    parallelism to use *all* surviving chips (a 16-way TP group shrink
+    strands ``chips mod 16`` GPUs; a re-plan can drop to 8-way and use
+    every one).
+
+    ``fabric`` defaults to the old plan's fabric *before* the loss;
+    ``chips`` defaults to ``plan.chips - lost_nodes × gpus_per_node``.
+    """
+    fabric = fabric if fabric is not None else plan.fabric
+    if chips is None:
+        chips = plan.chips - len(set(exclude_nodes)) * fabric.gpus_per_node
+    if chips < 1:
+        raise ValueError(f"no chips survive the loss of nodes "
+                         f"{sorted(set(exclude_nodes))}")
+    return plan_parallelism(model_cfg, chips=chips, fabric=fabric,
+                            objective=objective, shape=shape,
+                            rules=plan.rules,
+                            compress=plan.collectives.compress,
+                            exclude_nodes=exclude_nodes)
 
 
 # ---------------------------------------------------------------------------

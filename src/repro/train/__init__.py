@@ -1,1 +1,6 @@
 from repro.train.step import TrainState, make_train_step, make_train_state_specs
+from repro.train.runtime import (DeviceLossEvent, DevicePool, FaultMonitor,
+                                 LoggingCallback, RecoveryRecord, RunnerState,
+                                 TelemetryCallback, Trainer, TrainerCallback,
+                                 TrainReport, make_elastic_mesh,
+                                 reshard_restore, shrink_data_axis)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.core.config import RunConfig
 from repro.optim import (AdamWState, adamw_init, adamw_update,
                          abstract_opt_state, opt_logical_axes)
+from repro.optim.compression import compress_grads, decompress_grads
 from repro.parallel.sharding import LogicalAxes
 
 
@@ -65,13 +66,20 @@ def make_train_state_specs(model, run_cfg: RunConfig, mesh, rules=None):
 
 # ---------------------------------------------------------------------------
 def _microbatches(batch: Dict, n: int) -> Dict:
-    """Reshape (B, ...) -> (n, B//n, ...) for scan-accumulation."""
-    def r(x):
-        if x.ndim >= 2 and x.shape[0] == 3:          # (3, B, S) positions
-            return jnp.moveaxis(
-                x.reshape(3, n, x.shape[1] // n, *x.shape[2:]), 1, 0)
-        return x.reshape(n, x.shape[0] // n, *x.shape[1:])
-    return jax.tree.map(r, batch)
+    """Reshape each (B, ...) leaf to (n, B//n, ...) for scan-accumulation.
+
+    The M-RoPE ``positions`` leaf is (sections, B, S) with the *second*
+    dim as batch; it is recognized by key name — dispatching on a leading
+    dim of 3 would misread any batch-of-3 tensor as M-RoPE sections."""
+    out = {}
+    for k, x in batch.items():
+        if k == "positions" and x.ndim >= 3:
+            out[k] = jnp.moveaxis(
+                x.reshape(x.shape[0], n, x.shape[1] // n, *x.shape[2:]),
+                1, 0)
+        else:
+            out[k] = x.reshape(n, x.shape[0] // n, *x.shape[1:])
+    return out
 
 
 def make_train_step(model, run_cfg: RunConfig):
@@ -90,31 +98,50 @@ def make_train_step(model, run_cfg: RunConfig):
             mb = _microbatches(batch, nmicro)
 
             def acc_body(carry, mbatch):
-                gacc, lacc = carry
-                (loss, _), grads = grad_fn(state.params, mbatch)
+                gacc, lacc, macc = carry
+                (loss, m), grads = grad_fn(state.params, mbatch)
                 if scheme == "bf16":
                     grads = jax.tree.map(
                         lambda g: g.astype(jnp.bfloat16), grads)
                 gacc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
                                     gacc, grads)
-                return (gacc, lacc + loss), None
+                macc = jax.tree.map(lambda a, v: a + v, macc, m)
+                return (gacc, lacc + loss, macc), None
 
             acc_dtype = jnp.bfloat16 if scheme == "bf16" else jnp.float32
             g0 = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, acc_dtype), state.params)
-            (gsum, lsum), _ = jax.lax.scan(acc_body, (g0, jnp.zeros(())), mb)
+            m_shape = jax.eval_shape(
+                lambda p, b: grad_fn(p, b)[0][1], state.params,
+                jax.tree.map(lambda x: x[0], mb))
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m_shape)
+            (gsum, lsum, msum), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros(()), m0), mb)
             grads = jax.tree.map(
                 lambda g: (g / nmicro).astype(jnp.float32), gsum)
             loss = lsum / nmicro
-            metrics: Dict[str, jax.Array] = {"loss": loss}
+            metrics: Dict[str, jax.Array] = {
+                "loss": loss,
+                **jax.tree.map(lambda v: v / nmicro, msum)}
         else:
             (loss, m), grads = grad_fn(state.params, batch)
             metrics = {"loss": loss, **m}
 
+        # wire compression round-trip on the reduced gradient (the bytes
+        # that cross the narrow cross-pod hop), updating error feedback
+        new_ef = state.ef
+        if scheme == "int8_ef":
+            wire, scales, new_ef = compress_grads(grads, scheme, state.ef)
+            grads = decompress_grads(wire, scales, scheme)
+        elif scheme == "bf16" and not (nmicro and nmicro > 1):
+            # microbatch path already accumulated in bf16
+            grads = decompress_grads(
+                compress_grads(grads, scheme, None)[0], None, scheme)
+
         new_params, new_opt, stats = adamw_update(
             grads, state.opt, state.params, opt_cfg)
         metrics.update(stats)
-        return TrainState(params=new_params, opt=new_opt, ef=state.ef), \
+        return TrainState(params=new_params, opt=new_opt, ef=new_ef), \
             metrics
 
     return train_step

@@ -134,15 +134,19 @@ print("OK")
 
 def test_elastic_shrink_and_restore():
     """Lose 'nodes', rebuild a smaller mesh, restore the checkpoint onto
-    it, keep training — the §8.7 fault-containment path."""
+    it, keep training — the §8.7 fault-containment path (exercised via
+    the launch.elastic deprecation shim on purpose)."""
     _run_child(r"""
 import tempfile
+import warnings
 import jax, jax.numpy as jnp
 from repro.checkpoint import CheckpointManager
 from repro.configs import reduced_config
 from repro.core.config import RunConfig, ShapeConfig, StepKind
-from repro.launch.elastic import make_elastic_mesh, reshard_restore, \
-    shrink_data_axis
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore", DeprecationWarning)
+    from repro.launch.elastic import make_elastic_mesh, reshard_restore, \
+        shrink_data_axis
 from repro.models.model import build_model, make_concrete_batch
 from repro.parallel import sharding as shd
 from repro.train.step import (abstract_train_state, init_train_state,
@@ -172,6 +176,126 @@ with shd.use_sharding(mesh):
     with mesh:
         new_state, metrics = jax.jit(step)(restored, batch)
 assert s == 1 and float(metrics["loss"]) > 0
+print("OK")
+""")
+
+
+def test_reshard_restore_equivalence():
+    """Train K steps on mesh A, kill a node, restore onto the re-planned
+    mesh B: the resharded state is bitwise the checkpointed state, and
+    continuing matches a never-interrupted run at the same step."""
+    _run_child(r"""
+import tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.checkpoint import CheckpointManager
+from repro.configs import reduced_config
+from repro.core.config import OptimizerConfig, RunConfig, ShapeConfig, \
+    StepKind
+from repro.data import PackedPipeline
+from repro.models.model import build_model
+from repro.parallel.plan import replan, resolve_plan
+from repro.train.runtime import DevicePool, reshard_restore
+from repro.train.step import (abstract_train_state, init_train_state,
+                              make_train_step, train_state_logical_axes)
+
+cfg = reduced_config("gemma-2b")
+shape = ShapeConfig("t", 32, 8, StepKind.TRAIN)
+run_cfg = RunConfig(model=cfg, shape=shape,
+                    optimizer=OptimizerConfig(lr=3e-4, warmup_steps=2,
+                                              total_steps=8))
+model = build_model(cfg)
+step = make_train_step(model, run_cfg)
+axes = train_state_logical_axes(model, run_cfg)
+
+def batches(n):
+    pipe = PackedPipeline(cfg, shape, seed=0)
+    return [{k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+            for _ in range(n)]
+
+# uninterrupted reference: 6 steps on mesh A (data=4, model=2)
+plan_a = resolve_plan("data=4,model=2")
+ref_losses = []
+with plan_a.activate() as mesh:
+    state = init_train_state(model, run_cfg, jax.random.key(0))
+    state = jax.device_put(state, plan_a.shardings(state, axes, mesh=mesh))
+    sf = jax.jit(step)
+    for b in batches(6):
+        state, m = sf(state, b)
+        ref_losses.append(float(m["loss"]))
+ref_state_host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+# interrupted run: checkpoint at step 4, then node 1 (of 4x2) dies
+mgr = CheckpointManager(tempfile.mkdtemp())
+with plan_a.activate() as mesh:
+    state = init_train_state(model, run_cfg, jax.random.key(0))
+    state = jax.device_put(state, plan_a.shardings(state, axes, mesh=mesh))
+    sf = jax.jit(step)
+    for b in batches(4):
+        state, _ = sf(state, b)
+    mgr.save(4, state)
+ck_host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+pool = DevicePool(gpus_per_node=2)
+pool.kill_node(1)
+plan_b = replan(plan_a, cfg, exclude_nodes=pool.dead_nodes,
+                chips=pool.alive_count, shape=shape, fabric=pool.fabric())
+assert plan_b.chips == 6
+mesh_b = plan_b.mesh(devices=pool.alive_devices())
+abstract = abstract_train_state(model, run_cfg)
+with plan_b.activate(mesh_b):
+    restored, extra, s = reshard_restore(mgr, abstract, axes, mesh_b)
+    assert s == 4
+    # resharding is exact: restored leaves == checkpointed leaves bitwise
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(ck_host)):
+        np.testing.assert_array_equal(np.asarray(jax.device_get(a)), b)
+    sf_b = jax.jit(step)
+    got_losses = []
+    for b in batches(6)[4:]:
+        restored, m = sf_b(restored, b)
+        got_losses.append(float(m["loss"]))
+# loss continuity across the mesh change (bf16 reduction-order tolerance)
+np.testing.assert_allclose(got_losses, ref_losses[4:], atol=2e-2)
+print("OK")
+""")
+
+
+def test_trainer_elastic_recovery_end_to_end():
+    """The full runtime loop on fake devices: FaultMonitor event ->
+    DRAINING at the ckpt boundary -> REPLANNING (8->6 chips) ->
+    RESTORING (resharded) -> RUNNING, with loss continuity."""
+    _run_child(r"""
+import tempfile
+import numpy as np
+from repro.configs import reduced_config
+from repro.core.config import OptimizerConfig, RunConfig, ShapeConfig, \
+    StepKind
+from repro.parallel.plan import resolve_plan
+from repro.train.runtime import (DevicePool, FaultMonitor, RunnerState,
+                                 Trainer)
+
+cfg = reduced_config("gemma-2b")
+shape = ShapeConfig("t", 32, 8, StepKind.TRAIN)
+run_cfg = RunConfig(model=cfg, shape=shape,
+                    optimizer=OptimizerConfig(lr=3e-4, warmup_steps=2,
+                                              total_steps=10))
+
+ref = Trainer(run_cfg, plan=resolve_plan("data=4,model=2"),
+              ckpt_dir=tempfile.mkdtemp(), ckpt_every=4).run(10)
+
+tr = Trainer(run_cfg, plan=resolve_plan("data=4,model=2"),
+             ckpt_dir=tempfile.mkdtemp(), ckpt_every=4,
+             fault_monitor=FaultMonitor.from_pairs([(5, 1)]),
+             recovery="replan", pool=DevicePool(gpus_per_node=2))
+rep = tr.run(10)
+assert rep.final_state == RunnerState.DONE
+assert [s.value for s in rep.state_history] == [
+    "init", "running", "draining", "replanning", "restoring", "running",
+    "done"]
+rec = rep.recoveries[0]
+assert rec.lost_steps == 0 and rec.resume_step == 8
+assert (rec.chips_before, rec.chips_after) == (8, 6)
+assert rec.plan_after.startswith("auto/")
+np.testing.assert_allclose(rep.losses, ref.losses, atol=2e-2)
 print("OK")
 """)
 

@@ -24,8 +24,8 @@ from repro.parallel.plan import (CollectiveSchedule, Layout, ParallelPlan,
                                  PipelineSpec, default_rules,
                                  enumerate_layouts, multi_pod_plan,
                                  naive_production_layout, plan_from_layout,
-                                 plan_parallelism, resolve_plan, score_layout,
-                                 single_pod_plan)
+                                 plan_parallelism, replan, resolve_plan,
+                                 score_layout, single_pod_plan)
 from repro.parallel.sharding import _DEFAULT_RULES, logical_to_spec
 
 pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
@@ -198,6 +198,69 @@ def test_enumerate_layouts_partitions_chips():
     for chips in (24, 96, 256, 768):
         got = enumerate_layouts(cfg, chips)
         assert got and all(l.chips == chips for l in got), (chips, got)
+
+
+def test_interleaving_improves_deep_pipe_score():
+    """ROADMAP item: the analytic bubble assumed plain GPipe, over-
+    penalizing deep-pipe layouts.  With interleaved-1F1B scoring a deep
+    pipe must strictly improve (vp > 1 chosen), and the chosen vp rides
+    into the plan's PipelineSpec."""
+    cfg = get_config("gpt3-175b")            # 96 layers: vp up to 4 valid
+    shape = SHAPES["train_4k"]
+    deep = Layout(pod=2, data=2, model=16, pipe=8)
+    plain = score_layout(cfg, shape, deep, interleave=False)
+    inter = score_layout(cfg, shape, deep, interleave=True)
+    assert plain.vp == 1
+    assert inter.vp > 1
+    assert inter.step_s < plain.step_s
+    # shallow pipe: interleaving never hurts (vp=1 stays available)
+    shallow = Layout(pod=2, data=16, model=8, pipe=2)
+    assert score_layout(cfg, shape, shallow).step_s <= \
+        score_layout(cfg, shape, shallow, interleave=False).step_s
+    # vp must divide the per-stage layer count: 18 layers / pipe=2 allows
+    # vp in {1, 3} only — never a vp that fractures a stage
+    g = get_config("gemma-2b")               # 18 layers
+    s = score_layout(g, shape, Layout(pod=1, data=4, model=2, pipe=2))
+    assert g.num_layers % (2 * s.vp) == 0
+    # the auto-planner threads the chosen vp into the emitted plan
+    plan = plan_parallelism(cfg, chips=512)
+    if plan.pipeline is not None:
+        assert plan.pipeline.vp == plan.score.vp
+
+
+def test_replan_after_node_loss():
+    """§8.7: replan() re-runs the auto-planner over the surviving chips
+    with failed nodes out of the fabric, keeping rules + compression."""
+    cfg = get_config("qwen3-32b")
+    old = plan_parallelism(cfg, chips=256, compress="bf16")
+    new = replan(old, cfg, exclude_nodes=(3,))
+    assert new.chips == 256 - 8              # one node = 8 GPUs gone
+    assert new.collectives.compress == "bf16"
+    assert new.rules == old.rules
+    assert new.score is not None and new.scorecard is not None
+    # chips override wins over the node arithmetic
+    assert replan(old, cfg, chips=128).chips == 128
+    with pytest.raises(ValueError, match="survive"):
+        replan(old, cfg, chips=0)
+    # determinism: the same loss re-plans identically
+    again = replan(old, cfg, exclude_nodes=(3,))
+    assert again.mesh_shape == new.mesh_shape
+
+
+def test_plan_parallelism_exclude_nodes_shrinks_fabric():
+    from repro.core.fabric import FABRIC
+    cfg = get_config("qwen3-32b")
+    # capacity check happens against the shrunken fabric: at full fabric
+    # 800 chips fit (100 nodes), but not with 60 nodes excluded
+    with pytest.raises(ValueError, match="exceed fabric capacity"):
+        plan_parallelism(cfg, chips=400,
+                         exclude_nodes=tuple(range(60)))
+    with pytest.raises(ValueError, match="no capacity"):
+        plan_parallelism(cfg, chips=8,
+                         exclude_nodes=tuple(range(FABRIC.nodes)))
+    # surviving-chip plan still resolves
+    p = plan_parallelism(cfg, chips=248, exclude_nodes=(1,))
+    assert p.chips == 248
 
 
 def test_mqa_fallback_is_scored():
