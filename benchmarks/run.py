@@ -22,7 +22,7 @@ SUITES = [
     ("reference", "benchmarks.reference_compare"),  # Table 12
     ("workload", "benchmarks.workload"),            # Figures 3-7, T13-14
     ("scheduler", "benchmarks.scheduler_study"),    # §8.5 (beyond paper)
-    ("serving", "benchmarks.serving_load"),         # serving SLOs (§7 mix)
+    ("serving", "benchmarks.serving_load"),         # paged KV SLOs (§7 mix)
     ("kernels", "benchmarks.kernel_bench"),         # decode-path kernels
     ("elastic", "benchmarks.elastic_bench"),        # §8.7 fault recovery
     ("roofline", "benchmarks.roofline_table"),      # §Roofline

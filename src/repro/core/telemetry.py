@@ -157,7 +157,7 @@ class ServingTelemetry:
             return [r[key] for r in fin if r.get(key) is not None]
 
         ttft, tpot, qw = pick("ttft_s"), pick("tpot_s"), pick("queue_wait_s")
-        return {
+        out = {
             "requests": len(self.records),
             "finished": len(fin),
             "cancelled": sum(r["state"] == "cancelled" for r in self.records),
@@ -169,6 +169,21 @@ class ServingTelemetry:
             "queue_wait_p50_ms": percentile(qw, 50) * 1e3,
             "queue_wait_p99_ms": percentile(qw, 99) * 1e3,
         }
+        # cache-memory accounting (paged-KV serving; absent on records
+        # from engines predating it — duck-typed .get keeps old callers)
+        alloc, used = pick("kv_allocated_bytes"), pick("kv_used_bytes")
+        if alloc:
+            out["kv_allocated_mb"] = sum(alloc) / 1e6
+            out["kv_used_mb"] = sum(used) / 1e6
+            out["kv_utilization"] = (sum(used) / sum(alloc)) if sum(alloc) \
+                else 0.0
+        pft = pick("prefilled_tokens")
+        if pft:
+            out["prefilled_tokens"] = sum(pft)
+        pct = pick("prefix_cached_tokens")
+        if any(pct):
+            out["prefix_cached_tokens"] = sum(pct)
+        return out
 
     def close(self):
         if self._fh:

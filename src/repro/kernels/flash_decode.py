@@ -104,7 +104,14 @@ def flash_decode_pallas(q, k, v, q_pos, k_pos, *, causal: bool = True,
     G = H // K
     bk = min(block_k, T)
     if T % bk:
-        raise NotImplementedError("cache length not divisible by block_k")
+        # pad the tail block with masked columns (k_pos = -1 marks them
+        # empty) so odd cache lengths work; padded K/V are zeros and are
+        # never read through the position mask
+        pad = bk - T % bk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        T += pad
     splits = T // bk
     if window is None:
         window = 1 << 30
@@ -144,6 +151,129 @@ def flash_decode_pallas(q, k, v, q_pos, k_pos, *, causal: bool = True,
         ],
         interpret=interpret,
     )(window, qp, k_pos.astype(jnp.int32), qg, kt, vt)
+
+    out = combine_partials(o_part, m_part, l_part)         # (B, K, G, d)
+    return out.reshape(B, 1, H, d).astype(q.dtype)
+
+
+def _paged_decode_kernel(bt_ref, win_ref, qpos_ref, q_ref, k_ref, v_ref,
+                         kpos_ref, o_ref, m_ref, l_ref, *, scale: float,
+                         causal: bool, softcap: Optional[float]):
+    """One (batch row × kv head × block-table entry) program.
+
+    Same math as ``_decode_kernel`` with one addition: the K/V block was
+    gathered FROM THE GLOBAL POOL via the scalar-prefetched block table
+    (``bt_ref``), and an unmapped table entry (-1) kills the whole
+    block's columns so its pool block — which may belong to another
+    request — contributes nothing.
+    """
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+    blk = bt_ref[b, si]                    # pool block id, -1 = unmapped
+    q = q_ref[0, 0]                        # (G, d)
+    k = k_ref[0, :, 0]                     # (bs, d)
+    v = v_ref[0, :, 0]                     # (bs, d)
+    qp = qpos_ref[0, 0]                    # scalar: this row's position
+    kp = kpos_ref[0]                       # (bs,)
+    window = win_ref[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # (G, bs)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    valid = (kp >= 0) & (blk >= 0)
+    if causal:
+        valid &= qp >= kp
+    valid &= (qp - kp) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m = s.max(axis=-1)                                     # (G,)
+    p = jnp.where(valid[None, :], jnp.exp(s - m[:, None]), 0.0)
+    l = p.sum(axis=-1)                                     # (G,)
+    acc = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (G, d)
+
+    o_ref[0, 0, 0] = acc
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+def flash_decode_paged(q, k_pool, v_pool, q_pos, kp_pool, block_tables, *,
+                       causal: bool = True, window=None,
+                       softcap: Optional[float] = None,
+                       interpret: bool = False):
+    """Grouped split-KV flash decode through per-request block tables.
+
+    q: (B, 1, H, d) — ONE query token per row.  K/V live in a global
+    paged pool shared by every request: k_pool, v_pool are
+    (num_blocks, block_size, K, d), kp_pool is (num_blocks, block_size)
+    int32 with -1 marking unwritten slots.  block_tables is (B, max_blocks)
+    int32 — entry j is the pool block holding row positions
+    [j*block_size, (j+1)*block_size), -1 = not yet mapped.
+
+    The table rides in as a scalar-prefetch operand so the BlockSpec
+    index maps gather pool blocks directly inside the Pallas grid — the
+    kv-split axis of the PR 4 kernel becomes the block-table axis and
+    the log-sum-exp combine epilogue is unchanged.  With
+    block_size == block_k the per-split arithmetic is identical to the
+    contiguous kernel, so f32 outputs match bit-for-bit.
+    """
+    B, S, H, d = q.shape
+    NB, BS, K, dk = k_pool.shape
+    MAXB = block_tables.shape[1]
+    if S != 1:
+        raise NotImplementedError("paged flash decode handles a single "
+                                  f"query token per row (got S={S})")
+    if H % K:
+        raise NotImplementedError(f"q heads {H} not grouped over kv {K}")
+    G = H // K
+    if window is None:
+        window = 1 << 30
+    window = jnp.asarray(window, jnp.int32).reshape(1)
+    qp = jnp.broadcast_to(q_pos.astype(jnp.int32).reshape(B, -1)[:, :1],
+                          (B, 1))
+    qg = q[:, 0].reshape(B, K, G, d)
+    bt = block_tables.astype(jnp.int32)
+    # unmapped entries still index the pool (clamped to block 0); their
+    # columns are masked dead in-kernel via blk < 0
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, MAXB),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, si, bt: (0,)),          # window
+            pl.BlockSpec((1, 1), lambda b, h, si, bt: (b, 0)),      # q_pos
+            pl.BlockSpec((1, 1, G, d), lambda b, h, si, bt: (b, h, 0, 0)),
+            pl.BlockSpec((1, BS, 1, d),
+                         lambda b, h, si, bt:
+                         (jnp.maximum(bt[b, si], 0), 0, h, 0)),     # k block
+            pl.BlockSpec((1, BS, 1, d),
+                         lambda b, h, si, bt:
+                         (jnp.maximum(bt[b, si], 0), 0, h, 0)),     # v block
+            pl.BlockSpec((1, BS),
+                         lambda b, h, si, bt:
+                         (jnp.maximum(bt[b, si], 0), 0)),           # k_pos
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G, d),
+                         lambda b, h, si, bt: (b, h, si, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, si, bt: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, si, bt: (b, h, si, 0)),
+        ],
+    )
+    o_part, m_part, l_part = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=1.0 / math.sqrt(d),
+                          causal=causal, softcap=softcap),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, MAXB, G, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, MAXB, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, MAXB, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bt, window, qp, qg, k_pool, v_pool, kp_pool.astype(jnp.int32))
 
     out = combine_partials(o_part, m_part, l_part)         # (B, K, G, d)
     return out.reshape(B, 1, H, d).astype(q.dtype)

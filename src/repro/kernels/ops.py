@@ -72,6 +72,31 @@ def flash_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
                                     chunk=chunk)
 
 
+def flash_decode_paged(q, k_pool, v_pool, q_pos, kp_pool, block_tables, *,
+                       causal=True, window=None, softcap=None):
+    """Backend-dispatched paged flash decode.
+
+    q: (B, 1, H, d); k_pool, v_pool: (num_blocks, block_size, K, d) —
+    the GLOBAL block pool shared by all requests; kp_pool:
+    (num_blocks, block_size) int32 positions (-1 = unwritten);
+    block_tables: (B, max_blocks) int32, -1 = unmapped.  The Pallas
+    kernel gathers pool blocks through the scalar-prefetched table
+    inside the grid; the pure-jnp twin gathers with take + reshape.
+    """
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.kernels.flash_decode import flash_decode_paged as _paged
+        try:
+            return _paged(q, k_pool, v_pool, q_pos, kp_pool, block_tables,
+                          causal=causal, window=window, softcap=softcap,
+                          interpret=(mode == "interpret"))
+        except NotImplementedError:
+            pass
+    return _ref.flash_decode_paged_ref(q, k_pool, v_pool, q_pos, kp_pool,
+                                       block_tables, causal=causal,
+                                       window=window, softcap=softcap)
+
+
 def rmsnorm(x, scale, eps: float = 1e-6):
     mode = _use_pallas()
     if mode is not None:

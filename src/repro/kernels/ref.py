@@ -233,6 +233,32 @@ def flash_decode_ref(q, k, v, q_pos, k_pos, *, causal=True, window=None,
     return jnp.moveaxis(out, 3, 1).reshape(B, S, H, d).astype(q.dtype)
 
 
+def flash_decode_paged_ref(q, k_pool, v_pool, q_pos, kp_pool, block_tables,
+                           *, causal=True, window=None, softcap=None):
+    """Paged decode attention — the pure-jnp twin of
+    ``kernels.flash_decode.flash_decode_paged`` (production CPU path).
+
+    Gathers each row's K/V blocks from the global pool through its block
+    table, masks unmapped entries (-1) dead via k_pos = -1, then
+    delegates to ``flash_decode_ref`` — so the gathered layout is
+    EXACTLY the contiguous cache the non-paged path would have seen and
+    the math (hence f32 bits) is identical.
+
+    q: (B, 1, H, d); k_pool, v_pool: (num_blocks, block_size, K, d);
+    kp_pool: (num_blocks, block_size) int32; block_tables:
+    (B, max_blocks) int32 with -1 = unmapped.
+    """
+    B = q.shape[0]
+    NB, BS, K, d = k_pool.shape
+    bt = block_tables.astype(jnp.int32)
+    safe = jnp.maximum(bt, 0)                              # (B, MAXB)
+    k = k_pool[safe].reshape(B, -1, K, d)
+    v = v_pool[safe].reshape(B, -1, K, d)
+    kp = jnp.where(bt[..., None] >= 0, kp_pool[safe], -1).reshape(B, -1)
+    return flash_decode_ref(q, k, v, q_pos, kp, causal=causal,
+                            window=window, softcap=softcap)
+
+
 # ---------------------------------------------------------------------------
 # rmsnorm oracle
 def rmsnorm_ref(x, scale, eps=1e-6):

@@ -230,10 +230,15 @@ def attention(
       * decode:                       cache_kv = (k_cache, v_cache, k_pos)
                                       (projected new kv already merged by
                                       the caller's cache update)
+      * paged decode/prefill:         cache_kv = (k_pool, v_pool, kp_pool,
+                                      block_tables) — K/V gathered from the
+                                      global block pool through per-row
+                                      block tables (serving paged KV)
     """
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     G = H // K
     B, S, _ = x.shape
+    paged = cache_kv is not None and len(cache_kv) == 4
 
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
     q = constrain(q, "batch", None, "act_heads", None)
@@ -263,8 +268,13 @@ def attention(
         else:
             q_pos = positions if positions.ndim <= 2 else positions[0]
     else:
-        k, v, k_pos = cache_kv
-        T = k.shape[1]
+        if paged:
+            k_pool, v_pool, kp_pool, btab = cache_kv
+            k = v = k_pos = None
+            T = btab.shape[1] * k_pool.shape[1]
+        else:
+            k, v, k_pos = cache_kv
+            T = k.shape[1]
         if not use_rope:
             q_pos = positions if positions.ndim <= 2 else positions[0]
         elif cfg.m_rope_sections is not None:
@@ -278,12 +288,31 @@ def attention(
 
     if q_pos.ndim == 1:
         q_pos = jnp.broadcast_to(q_pos, (B, S))
-    if k_pos.ndim == 1:
+    if paged:
+        k_pos_b = None
+    elif k_pos.ndim == 1:
         k_pos_b = jnp.broadcast_to(k_pos, (B, T))
     else:
         k_pos_b = k_pos
 
-    if cache_kv is not None:
+    if paged:
+        # K/V stay in the shared block pool; per-row block tables route
+        # the gather.  S == 1 (serving decode) goes straight through the
+        # paged split-KV kernel — the table lookup happens INSIDE the
+        # Pallas grid via scalar prefetch, so no contiguous copy of the
+        # cache is ever materialized.  Multi-token suffix prefill (cold
+        # path, once per admitted request) gathers a contiguous view.
+        from repro.kernels.ops import flash_attention, flash_decode_paged
+        if S == 1:
+            out = flash_decode_paged(q, k_pool, v_pool, q_pos, kp_pool,
+                                     btab, causal=causal, window=window,
+                                     softcap=cfg.logit_softcap)
+        else:
+            kg, vg, kpg = gather_paged_kv(k_pool, v_pool, kp_pool, btab)
+            out = flash_attention(q, kg, vg, q_pos, kpg, causal=causal,
+                                  window=window, softcap=cfg.logit_softcap,
+                                  chunk=chunk)
+    elif cache_kv is not None:
         # Decode/cross with a populated cache: K/V stay GROUPED at the
         # native kv-head count — no repeat materialization.  For S == 1
         # (the serving decode hot path) ops.flash_attention dispatches
@@ -317,6 +346,26 @@ def attention(
 
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return constrain(y, "batch", None, "act_embed")
+
+
+def gather_paged_kv(k_pool, v_pool, kp_pool, block_tables):
+    """Gather per-row contiguous K/V views from the global block pool.
+
+    k_pool, v_pool: (num_blocks, block_size, K, hd); kp_pool:
+    (num_blocks, block_size) int32; block_tables: (B, max_blocks) int32
+    with -1 = unmapped.  Returns k, v of shape
+    (B, max_blocks*block_size, K, hd) and positions (B, max_blocks*
+    block_size) with unmapped entries masked to -1 — exactly the
+    contiguous cache layout the non-paged decode path would have seen.
+    """
+    NB, BS, K, hd = k_pool.shape
+    bt = block_tables.astype(jnp.int32)
+    B = bt.shape[0]
+    safe = jnp.maximum(bt, 0)
+    k = k_pool[safe].reshape(B, -1, K, hd)
+    v = v_pool[safe].reshape(B, -1, K, hd)
+    kp = jnp.where(bt[..., None] >= 0, kp_pool[safe], -1).reshape(B, -1)
+    return k, v, kp
 
 
 def project_kv(p: Dict, x: jax.Array, cfg: ModelConfig,

@@ -182,6 +182,37 @@ def _cache_write(kc, vc, pc, k_new, v_new, pos):
     return kc, vc, pc
 
 
+def _paged_cache_write(kc, vc, pc, k_new, v_new, pos, bt):
+    """Scatter new KV into the global block pool through block tables.
+
+    kc, vc: (num_blocks, block_size, K, hd); pc: (num_blocks,
+    block_size); k_new, v_new: (B, S, K, hd); pos: (B,) or (B, S)
+    absolute token positions with -1 marking pads; bt: (B, max_blocks)
+    block tables (-1 = unmapped).
+
+    Each token's target is (bt[row, pos // block_size], pos % block_size).
+    Invalid targets — pad positions, positions past the table, unmapped
+    table entries — are routed to block index ``num_blocks`` and dropped
+    by the scatter (NEVER clamped: JAX wraps negative indices, so a raw
+    -1 would silently corrupt the last pool block, which may hold
+    another request's KV).
+    """
+    NB, BS = pc.shape
+    MAXB = bt.shape[1]
+    p = pos.astype(jnp.int32)
+    if p.ndim == 1:
+        p = p[:, None]                                     # (B, 1)
+    bidx = jnp.clip(p // BS, 0, MAXB - 1)
+    blk = jnp.take_along_axis(bt, bidx, axis=1)            # (B, S)
+    ok = (p >= 0) & (p // BS < MAXB) & (blk >= 0)
+    blk = jnp.where(ok, blk, NB)
+    off = jnp.where(ok, jnp.mod(p, BS), 0)
+    kc = kc.at[blk, off].set(k_new, mode="drop")
+    vc = vc.at[blk, off].set(v_new, mode="drop")
+    pc = pc.at[blk, off].set(p, mode="drop")
+    return kc, vc, pc
+
+
 # ---------------------------------------------------------------------------
 class DecoderModel:
     """Functional wrapper: config + param defs + step functions."""
@@ -317,9 +348,38 @@ class DecoderModel:
         return total, {"xent": loss, "aux_loss": aux, "z_loss": z_loss}
 
     # -- serving -----------------------------------------------------------
-    def cache_spec(self, batch_size: int, cache_len: int) -> Dict:
-        """Abstract cache structure (ShapeDtypeStructs) for serve shapes."""
+    def cache_spec(self, batch_size: int, cache_len: int, *,
+                   paged: Optional[Tuple[int, int]] = None) -> Dict:
+        """Abstract cache structure (ShapeDtypeStructs) for serve shapes.
+
+        ``paged=(num_blocks, block_size)`` swaps the per-row contiguous
+        K/V for a GLOBAL block pool shared by every request: k/v become
+        (layers, num_blocks, block_size, K, hd) and pos
+        (layers, num_blocks, block_size) — no batch axis; requests
+        address the pool through block tables carried in the decode
+        batch.  Paged mode supports dense global-attention caches only
+        (no SSM/hybrid state, no windowed ring layouts, no M-RoPE)."""
         cfg = self.cfg
+        if paged is not None:
+            if (not cfg.uses_attention
+                    or cfg.family in (Family.SSM, Family.HYBRID)
+                    or window_layout(cfg, cache_len) is not None
+                    or cfg.m_rope_sections is not None):
+                raise NotImplementedError(
+                    "paged KV cache supports dense global-attention "
+                    f"models only (family={cfg.family})")
+            nb, bs = paged
+            Lr = cfg.num_layers
+            return {
+                "len": jax.ShapeDtypeStruct((), jnp.int32),
+                "k": jax.ShapeDtypeStruct(
+                    (Lr, nb, bs, cfg.num_kv_heads, cfg.head_dim),
+                    jnp.bfloat16),
+                "v": jax.ShapeDtypeStruct(
+                    (Lr, nb, bs, cfg.num_kv_heads, cfg.head_dim),
+                    jnp.bfloat16),
+                "pos": jax.ShapeDtypeStruct((Lr, nb, bs), jnp.int32),
+            }
         c: Dict[str, Any] = {"len": jax.ShapeDtypeStruct((), jnp.int32)}
         Lr = cfg.num_layers
         if cfg.family in (Family.SSM, Family.HYBRID):
@@ -387,14 +447,16 @@ class DecoderModel:
         }
         return {k: names[k] for k in spec}
 
-    def init_cache(self, batch_size: int, cache_len: int) -> Dict:
-        spec = self.cache_spec(batch_size, cache_len)
+    def init_cache(self, batch_size: int, cache_len: int, *,
+                   paged: Optional[Tuple[int, int]] = None) -> Dict:
+        spec = self.cache_spec(batch_size, cache_len, paged=paged)
 
-        def zero(s):
-            if s.dtype == jnp.int32 and s.shape and s.shape[-1] == cache_len:
+        def zero(name, s):
+            if s.dtype == jnp.int32 and s.shape and (
+                    name.startswith("pos") or name.endswith("pos")):
                 return jnp.full(s.shape, -1, s.dtype)   # empty slots
             return jnp.zeros(s.shape, s.dtype)
-        return jax.tree.map(zero, spec)
+        return {name: zero(name, s) for name, s in spec.items()}
 
     def prefill(self, params, batch) -> Tuple[jax.Array, Dict]:
         """Full-sequence forward that also populates the cache.
@@ -512,6 +574,57 @@ class DecoderModel:
             jnp.float32)
         return x, cache
 
+    def prefix_prefill(self, params, batch, cache) -> Tuple[jax.Array, Dict]:
+        """Multi-token prefill THROUGH the paged block pool.
+
+        The serving engine admits a request whose leading prompt blocks
+        may already sit in the pool (prefix-cache hits): only the suffix
+        is forwarded here.  Per layer the suffix tokens' K/V are written
+        into the slot's blocks FIRST, then attention runs over the
+        gathered cache — which now holds cached-prefix + fresh-suffix KV
+        — with position-based causal masking, so each suffix token sees
+        the shared prefix and its own predecessors exactly as a full
+        prefill would.  With zero cached blocks this degrades to a
+        normal prefill routed through the pool (the engine uses it as
+        the single paged join path).
+
+        batch: tokens (B, S) suffix tokens right-padded, positions
+        (B, S) absolute positions with -1 pads, block_tables
+        (B, max_blocks), length (B,) real-suffix-token counts.
+        Returns (last-real-token logits (B, V), new_cache)."""
+        cfg = self.cfg
+        if "k" not in cache or "block_tables" not in batch:
+            raise NotImplementedError("prefix_prefill requires a paged "
+                                      "dense-attention cache + block tables")
+        bt = batch["block_tables"]
+        x = self._embed_inputs(params, batch)
+        B, Sq, _ = x.shape
+        positions = batch["positions"]
+        new_cache = dict(cache)
+
+        def body(h, xs):
+            p_l, kc, vc, pc = xs
+            hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+            k_new, v_new = L.project_kv(p_l["attn"], hln, cfg, positions)
+            kc, vc, pc = _paged_cache_write(kc, vc, pc, k_new, v_new,
+                                            positions, bt)
+            hn, _, _ = _attn_mlp_block(
+                p_l, h, cfg, positions=positions, window=None,
+                cache_kv=(kc, vc, pc, bt), moe_impl=self.moe_impl)
+            return hn, (kc, vc, pc)
+
+        x, (ks, vs, ps) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["pos"]))
+        new_cache["k"], new_cache["v"], new_cache["pos"] = ks, vs, ps
+        new_cache["len"] = jnp.maximum(cache["len"],
+                                       jnp.max(positions) + 1)
+        x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
+        idx = jnp.clip(batch["length"].astype(jnp.int32) - 1, 0, Sq - 1)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = L.unembed(params["embed"], last, cfg)[:, 0]
+        return logits, new_cache
+
     def decode_step(self, params, batch, cache) -> Tuple[jax.Array, Dict]:
         """One-token decode. batch: {"tokens": (B, 1), ...}.
 
@@ -572,7 +685,32 @@ class DecoderModel:
                 return body
 
             wl = window_layout(cfg, 1 << 30)   # layout only (caps from cache)
-            if wl is None:
+            if "block_tables" in batch:
+                # paged serving: K/V live in the global block pool;
+                # writes scatter through the per-row block table and
+                # attention gathers through it inside the kernel grid
+                bt = batch["block_tables"]
+                prow = (jnp.broadcast_to(pos_row, (B,)).astype(jnp.int32)
+                        if getattr(pos_row, "ndim", 1) == 0
+                        else pos_row.astype(jnp.int32))
+
+                def paged_body(h, xs):
+                    p_l, kc, vc, pc = xs
+                    hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+                    k_new, v_new = L.project_kv(p_l["attn"], hln, cfg,
+                                                positions)
+                    kc, vc, pc = _paged_cache_write(kc, vc, pc, k_new,
+                                                    v_new, prow, bt)
+                    hn, _, _ = _attn_mlp_block(
+                        p_l, h, cfg, positions=positions, window=None,
+                        cache_kv=(kc, vc, pc, bt), moe_impl=self.moe_impl)
+                    return hn, (kc, vc, pc)
+
+                x, (ks, vs, ps) = jax.lax.scan(
+                    paged_body, x,
+                    (params["layers"], cache["k"], cache["v"], cache["pos"]))
+                new_cache["k"], new_cache["v"], new_cache["pos"] = ks, vs, ps
+            elif wl is None:
                 windows = layer_windows(cfg)
                 win_arr = (windows if windows is not None
                            else jnp.full((cfg.num_layers,), BIG_WINDOW,

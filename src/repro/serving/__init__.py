@@ -6,6 +6,7 @@ Public API:
   InferenceRequest  request record with lifecycle state + metrics
   GenerationResult  per-request output (tokens, done reason, TTFT/TPOT)
   SlotPool          fixed-slot cache pool with true per-slot lengths
+  BlockPool         paged KV block pool with refcounted prefix reuse
   make_generate_step  the jitted decode+sample step factory
 
 Deprecated (kept as shims): ContinuousBatcher, Request,
@@ -16,13 +17,14 @@ from repro.serving.engine import (Engine, make_decode_step,
 from repro.serving.request import (GenerationResult, InferenceRequest,
                                    RequestMetrics, RequestState)
 from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
+from repro.serving.paged import BlockPool
 from repro.serving.slots import SlotPool
 from repro.serving.batcher import ContinuousBatcher, Request
 
 __all__ = [
     "Engine", "SamplingParams", "GREEDY", "sample_tokens",
     "InferenceRequest", "GenerationResult", "RequestMetrics", "RequestState",
-    "SlotPool", "make_generate_step",
+    "SlotPool", "BlockPool", "make_generate_step",
     # deprecated shims
     "ContinuousBatcher", "Request", "make_prefill_step", "make_decode_step",
 ]

@@ -42,6 +42,7 @@ from repro.models.lm import window_layout
 from repro.serving.request import (GenerationResult, InferenceRequest,
                                    RequestState, TokenCallback)
 from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
+from repro.serving.paged import BlockPool
 from repro.serving.slots import SlotPool
 
 
@@ -58,7 +59,7 @@ def make_generate_step(model):
     cfg = model.cfg
 
     def generate_step(params, cache, tokens, positions, seeds, steps,
-                      temperature, top_k, top_p):
+                      temperature, top_k, top_p, block_tables=None):
         B = tokens.shape[0]
         if cfg.m_rope_sections is not None:
             pos = jnp.broadcast_to(positions[None, :, None], (3, B, 1))
@@ -67,6 +68,10 @@ def make_generate_step(model):
         batch = {"tokens": tokens[:, None],
                  "positions": pos.astype(jnp.int32),
                  "pos_row": positions.astype(jnp.int32)}
+        if block_tables is not None:
+            # paged serving: route cache reads/writes through the
+            # per-slot block tables into the global block pool
+            batch["block_tables"] = block_tables.astype(jnp.int32)
         logits, new_cache = model.decode_step(params, batch, cache)
         next_tok = sample_tokens(logits, seeds, steps, temperature,
                                  top_k, top_p)
@@ -103,6 +108,9 @@ class Engine:
     def __init__(self, model, params, *, slots: int = 4,
                  prefill_len: int = 64, cache_len: int = 256,
                  prefill_chunk: Optional[int] = None,
+                 block_size: Optional[int] = None,
+                 num_blocks: Optional[int] = None,
+                 prefix_cache: bool = True,
                  telemetry: Optional[ServingTelemetry] = None,
                  plan=None, clock=time.monotonic):
         cfg = model.cfg
@@ -152,8 +160,31 @@ class Engine:
         self._generate = jax.jit(make_generate_step(model))
         self._sample1 = jax.jit(sample_tokens)
 
-        self.cache = model.init_cache(slots, cache_len)
-        self.pool = SlotPool(slots)
+        # Paged KV: the cache becomes a GLOBAL pool of block_size-token
+        # blocks addressed through per-slot block tables; admission
+        # blocks on free blocks, not free slots, and shared prompt
+        # prefixes map existing blocks instead of re-prefilling.
+        self.paged = block_size is not None
+        if self.paged:
+            self.block_size = int(block_size)
+            self.max_blocks = -(-cache_len // self.block_size)
+            # default pool: HBM parity with the contiguous layout
+            # (slots × cache_len tokens, rounded up to whole blocks)
+            self.num_blocks = (int(num_blocks) if num_blocks is not None
+                               else slots * self.max_blocks)
+            # raises NotImplementedError for non-dense-global archs
+            self.cache = model.init_cache(
+                slots, cache_len, paged=(self.num_blocks, self.block_size))
+            self.pool: SlotPool = BlockPool(
+                slots, num_blocks=self.num_blocks,
+                block_size=self.block_size,
+                max_blocks_per_slot=self.max_blocks,
+                prefix_cache=prefix_cache)
+            self._prefix_prefill = jax.jit(model.prefix_prefill)
+        else:
+            self.block_size = self.num_blocks = None
+            self.cache = model.init_cache(slots, cache_len)
+            self.pool = SlotPool(slots)
         self.queue: List[InferenceRequest] = []
         self.requests: Dict[int, InferenceRequest] = {}
         self.finished: Dict[int, GenerationResult] = {}
@@ -209,7 +240,8 @@ class Engine:
         else:
             for slot, r in enumerate(self._slot_req):
                 if r is req:
-                    self._release(slot)
+                    self._account(slot, req)
+                    self._release(slot)   # returns blocks / decrefs prefix
                     break
         self._finalize(req, RequestState.CANCELLED)
         return True
@@ -232,6 +264,9 @@ class Engine:
         req.state = RequestState.PREFILL
         req.metrics.t_prefill_start = self.clock()
         S = int(min(len(req.prompt), self.prefill_len))
+        if self.paged:
+            self._join_paged(slot, req, S)
+            return
         Sp = self._bucket_len(S)
         toks = np.zeros(Sp, np.int32)
         toks[:S] = req.prompt[:S]
@@ -247,6 +282,40 @@ class Engine:
             batch["length"] = jnp.asarray([S], jnp.int32)
         with self._scope():
             logits, cache1 = self._prefill(self.params, batch)
+        self.cache = self.pool.scatter_prefill(self.cache, cache1, slot)
+        self.pool.acquire(slot, req.rid, S)
+        req.metrics.prefilled_tokens = S
+        self._finish_join(slot, req, logits)
+
+    def _join_paged(self, slot: int, req: InferenceRequest, S: int):
+        """Paged join: map blocks (prefix hits shared), prefill only the
+        suffix THROUGH the pool, publish the new full blocks."""
+        prompt = np.asarray(req.prompt[:S], np.int32)
+        cached = self.pool.acquire_blocks(slot, req.rid, prompt,
+                                          req.sampling.max_new_tokens)
+        Ssuf = S - cached
+        Sp = self._bucket_len(Ssuf)
+        toks = np.zeros(Sp, np.int32)
+        toks[:Ssuf] = prompt[cached:]
+        pos = np.arange(Sp, dtype=np.int32) + cached
+        pos[Ssuf:] = -1                   # pads: dropped writes, dead keys
+        batch: Dict[str, Any] = {
+            "tokens": jnp.asarray(toks)[None],
+            "positions": jnp.asarray(pos)[None],
+            "length": jnp.asarray([Ssuf], jnp.int32),
+            "block_tables": jnp.asarray(
+                self.pool.block_tables[slot:slot + 1]),
+        }
+        with self._scope():
+            logits, self.cache = self._prefix_prefill(self.params, batch,
+                                                      self.cache)
+        self.pool.register_prefix(slot, prompt)
+        req.metrics.prefix_cached_tokens = cached
+        req.metrics.prefilled_tokens = Ssuf
+        self._finish_join(slot, req, logits)
+
+    def _finish_join(self, slot: int, req: InferenceRequest, logits):
+        """Shared join tail: sample token 0, arm the slot's decode state."""
         sp = req.sampling
         first = self._sample1(
             logits,
@@ -255,8 +324,6 @@ class Engine:
             jnp.asarray([sp.temperature], jnp.float32),
             jnp.asarray([sp.top_k], jnp.int32),
             jnp.asarray([sp.top_p], jnp.float32))
-        self.cache = self.pool.scatter_prefill(self.cache, cache1, slot)
-        self.pool.acquire(slot, req.rid, S)
         self._slot_req[slot] = req
         tok = int(first[0])
         self.last_tok[slot] = tok
@@ -267,7 +334,7 @@ class Engine:
         self._steps[slot] = 1
         req.state = RequestState.DECODE
         req.metrics.t_first_token = self.clock()
-        last = self._is_last(req, tok)
+        last = self._is_last(req, tok) or self._at_capacity(slot)
         req.emit(tok, last)
         # the callback may have cancelled this request (reentrant
         # cancel): only retire the slot if it still holds it
@@ -280,6 +347,32 @@ class Engine:
         return (sp.eos_token is not None and tok == sp.eos_token) \
             or n_after >= sp.max_new_tokens
 
+    def _at_capacity(self, slot: int) -> bool:
+        """Paged slots retire at cache_len (no ring wraparound: evicting
+        a pool block could drop another request's shared history)."""
+        return self.paged and self.pool.lengths[slot] >= self.cache_len
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        """Dense bf16 K+V bytes one cached token costs (per layer pair;
+        positions excluded; approximate for hybrid archs)."""
+        cfg = self.cfg
+        if not cfg.uses_attention:
+            return 0
+        return cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+
+    def _account(self, slot: int, req: InferenceRequest):
+        """Stamp allocated-vs-used KV bytes before the slot is released
+        (the fragmentation signal the load benchmark reports)."""
+        bpt = self.kv_bytes_per_token
+        req.metrics.kv_used_bytes = int(
+            min(int(self.pool.lengths[slot]), self.cache_len)) * bpt
+        if self.paged:
+            req.metrics.kv_allocated_bytes = (
+                self.pool.allocated_blocks(slot) * self.block_size * bpt)
+        else:
+            req.metrics.kv_allocated_bytes = self.cache_len * bpt
+
     def _release(self, slot: int):
         self.pool.release(slot)
         self._slot_req[slot] = None
@@ -288,6 +381,7 @@ class Engine:
 
     def _retire(self, slot: int):
         req = self._slot_req[slot]
+        self._account(slot, req)
         self._release(slot)
         self._finalize(req, RequestState.FINISHED)
 
@@ -315,12 +409,30 @@ class Engine:
             free = self.pool.free_slots()
             if not free:
                 break
+            if self.paged:
+                # admission blocks on free BLOCKS, not free slots: the
+                # head request must fit its prompt + reserved growth in
+                # the pool (FIFO — no head-of-line reordering)
+                head = self.queue[0]
+                S = int(min(len(head.prompt), self.prefill_len))
+                if not self.pool.can_admit(
+                        np.asarray(head.prompt[:S], np.int32),
+                        head.sampling.max_new_tokens):
+                    break
             self._join(free[0], self.queue.pop(0))
             admitted += 1
         if self.pool.num_active == 0:
             return admitted > 0
+        if self.paged:
+            # map the block holding each active row's next write
+            # position before the tick (draws on admission reservations)
+            for slot in range(self.slots):
+                if self._slot_req[slot] is not None:
+                    self.pool.ensure_block(slot)
         self.cache["len"] = jnp.asarray(int(self.pool.lengths.max()),
                                         jnp.int32)
+        extra = ({"block_tables": jnp.asarray(self.pool.block_tables)}
+                 if self.paged else {})
         with self._scope():
             tok, self.cache = self._generate(
                 self.params, self.cache,
@@ -328,7 +440,7 @@ class Engine:
                 jnp.asarray(self.pool.positions()),
                 jnp.asarray(self._seeds), jnp.asarray(self._steps),
                 jnp.asarray(self._temp), jnp.asarray(self._top_k),
-                jnp.asarray(self._top_p))
+                jnp.asarray(self._top_p), **extra)
         tok_host = np.asarray(jax.block_until_ready(tok))
         self.last_tok = tok_host.copy()
         self.ticks += 1
@@ -341,7 +453,7 @@ class Engine:
             t = int(tok_host[slot])
             self.pool.advance(slot)
             self._steps[slot] += 1
-            last = self._is_last(req, t)
+            last = self._is_last(req, t) or self._at_capacity(slot)
             req.emit(t, last)
             if last and self._slot_req[slot] is req:
                 self._retire(slot)
@@ -384,4 +496,10 @@ class Engine:
 
     def stats(self) -> Dict:
         """Aggregate serving metrics (p50/p99 TTFT, TPOT, queue wait)."""
-        return self.telemetry.summary()
+        out = self.telemetry.summary()
+        if self.paged:
+            out["block_size"] = self.block_size
+            out["num_blocks"] = self.num_blocks
+            out["free_blocks"] = self.pool.free_blocks
+            out["prefix"] = self.pool.prefix_stats()
+        return out

@@ -1,0 +1,259 @@
+"""Paged KV block pool with refcounted prefix reuse.
+
+``BlockPool`` replaces the contiguous per-slot ring buffers of
+``SlotPool`` for serving: the KV cache is a GLOBAL pool of fixed-size
+blocks (``block_size`` tokens each) and every active request holds a
+block table — a row of pool block ids — instead of a dedicated
+``cache_len`` region.  The §7 workload mix is dominated by short
+requests, which strand most of a contiguous region; with paging a
+request pins only ``ceil(len / block_size)`` blocks, so the same HBM
+holds several times more concurrent requests.
+
+Admission blocks on free BLOCKS, not free slots: ``can_admit`` accounts
+the blocks a request will ever need (prompt + max_new_tokens, capped at
+the per-slot table size) and reserves the growth portion up front, so a
+mid-decode ``append`` can never deadlock against other admitted
+requests.
+
+On top of the pool sits a **prefix-cache index**: prompt prefixes are
+hashed at block granularity with a CHAIN hash (each block's digest
+folds in its predecessor's), so a hit on block j certifies the entire
+prefix [0, (j+1)*block_size) matches token-for-token — which, with
+position-0-anchored RoPE, makes the cached K/V bit-identical to what a
+fresh prefill would produce.  Hit blocks are mapped read-only into the
+new request's table (refcount += 1); the partial tail block is always
+private (copy-on-write at block granularity: it is simply never
+registered), so writers cannot touch shared history.  Released blocks
+with live index entries stay cached at refcount 0 and are reclaimed
+LRU-first when the free list runs dry.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.slots import SlotPool
+
+
+class BlockPool(SlotPool):
+    """Slot bookkeeping + global block pool + prefix index.
+
+    Duck-types as a ``SlotPool`` for the engine (lengths / owner /
+    acquire / release / advance / positions), adding block tables and
+    block-level admission.
+    """
+
+    def __init__(self, slots: int, *, num_blocks: int, block_size: int,
+                 max_blocks_per_slot: int, prefix_cache: bool = True):
+        super().__init__(slots)
+        if block_size <= 0 or num_blocks <= 0:
+            raise ValueError(f"bad pool geometry: {num_blocks}x{block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.max_blocks = max_blocks_per_slot
+        self.block_tables = np.full((slots, max_blocks_per_slot), -1,
+                                    np.int32)
+        self.refcount = np.zeros(num_blocks, np.int32)
+        # pop() takes from the end: keep low ids there for determinism
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._reserved = np.zeros(slots, np.int64)
+        self._total_reserved = 0
+        self.prefix_cache_enabled = prefix_cache
+        # digest -> (block id, that block's tokens); insertion/refresh
+        # order doubles as the LRU order for reclaim
+        self._index: "OrderedDict[bytes, Tuple[int, Tuple[int, ...]]]" = \
+            OrderedDict()
+        self._block_hash: Dict[int, bytes] = {}
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_hit_tokens = 0
+
+    # -- pool accounting ---------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        """Blocks on the free list right now (excludes cached)."""
+        return len(self._free)
+
+    @property
+    def cached_blocks(self) -> int:
+        """Refcount-0 blocks retained only by the prefix index
+        (reclaimable on demand)."""
+        return sum(1 for blk, _ in self._index.values()
+                   if self.refcount[blk] == 0)
+
+    def available_blocks(self) -> int:
+        """Blocks a NEW request may claim: free + reclaimable, minus
+        growth blocks already promised to admitted requests."""
+        return self.free_blocks + self.cached_blocks - self._total_reserved
+
+    def blocks_needed(self, prompt_len: int, max_new: int) -> int:
+        total = prompt_len + max_new
+        return min(-(-total // self.block_size), self.max_blocks)
+
+    def allocated_blocks(self, slot: int) -> int:
+        return int((self.block_tables[slot] >= 0).sum())
+
+    # -- prefix hashing ----------------------------------------------------
+    def _prefix_hashes(self, prompt: np.ndarray):
+        """Chain digests of each FULL block of ``prompt``.
+
+        Returns [(digest, block_tokens), ...]; digest j commits to all
+        tokens in blocks 0..j, so equal digests mean equal prefixes
+        (the stored per-block tokens double-check against collisions).
+        """
+        BS = self.block_size
+        out = []
+        h = b""
+        for j in range(len(prompt) // BS):
+            toks = tuple(int(t) for t in prompt[j * BS:(j + 1) * BS])
+            h = hashlib.blake2b(h + np.asarray(toks, np.int64).tobytes(),
+                                digest_size=16).digest()
+            out.append((h, toks))
+        return out
+
+    def probe_prefix(self, prompt: np.ndarray) -> int:
+        """Leading full blocks of ``prompt`` already in the index.
+
+        Capped so at least one prompt token stays in the suffix — the
+        engine needs the last prompt token's logits to sample token 0.
+        """
+        if not self.prefix_cache_enabled:
+            return 0
+        cap = (len(prompt) - 1) // self.block_size
+        hits = 0
+        for h, toks in self._prefix_hashes(prompt)[:cap]:
+            ent = self._index.get(h)
+            if ent is None or ent[1] != toks:
+                break
+            hits += 1
+        return hits
+
+    # -- admission ---------------------------------------------------------
+    def can_admit(self, prompt: np.ndarray, max_new: int) -> bool:
+        need = self.blocks_needed(len(prompt), max_new)
+        return need - self.probe_prefix(prompt) <= self.available_blocks()
+
+    def acquire_blocks(self, slot: int, rid: int, prompt: np.ndarray,
+                       max_new: int) -> int:
+        """Map ``slot``'s block table for ``prompt`` (+ reserved growth).
+
+        Leading blocks hit in the prefix index are mapped SHARED
+        (refcount += 1, no prefill needed); the rest of the prompt gets
+        fresh blocks; growth blocks for max_new decode tokens are
+        reserved but attached lazily.  Returns the number of
+        prefix-cached tokens (a multiple of block_size).
+        """
+        BS = self.block_size
+        S = len(prompt)
+        total = self.blocks_needed(S, max_new)
+        nb_prompt = -(-S // BS)
+        hits = self.probe_prefix(prompt)
+        hashes = self._prefix_hashes(prompt)
+        for j in range(hits):
+            h = hashes[j][0]
+            blk, toks = self._index[h]
+            self.refcount[blk] += 1
+            self._index.move_to_end(h)            # refresh LRU
+            self.block_tables[slot, j] = blk
+        for j in range(hits, nb_prompt):
+            self.block_tables[slot, j] = self._alloc()
+        grow = total - nb_prompt
+        if grow > 0:
+            self._reserved[slot] = grow
+            self._total_reserved += grow
+        super().acquire(slot, rid, S)
+        if hits:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += hits * BS
+        else:
+            self.prefix_misses += 1
+        return hits * BS
+
+    def register_prefix(self, slot: int, prompt: np.ndarray):
+        """Publish ``slot``'s FULL prompt blocks to the prefix index.
+
+        Called after the prefill wrote their K/V.  The partial tail
+        block — the only block this request will ever write again during
+        its own prefill — is never registered, which IS the
+        copy-on-write boundary: shared blocks are immutable by
+        construction (decode writes land at positions past the full
+        prompt blocks).
+        """
+        if not self.prefix_cache_enabled:
+            return
+        for j, (h, toks) in enumerate(self._prefix_hashes(prompt)):
+            blk = int(self.block_tables[slot, j])
+            if blk < 0:
+                break
+            ent = self._index.get(h)
+            if ent is None:
+                self._index[h] = (blk, toks)
+                self._block_hash[blk] = h
+            else:
+                self._index.move_to_end(h)
+
+    # -- decode growth -----------------------------------------------------
+    def ensure_block(self, slot: int) -> bool:
+        """Make sure the block holding position ``lengths[slot]`` is
+        mapped (the next decode token's write target).  Draws on this
+        slot's reservation; returns False past the table's capacity."""
+        nb = int(self.lengths[slot]) // self.block_size
+        if nb >= self.max_blocks:
+            return False
+        if self.block_tables[slot, nb] >= 0:
+            return True
+        self.block_tables[slot, nb] = self._alloc()
+        if self._reserved[slot] > 0:
+            self._reserved[slot] -= 1
+            self._total_reserved -= 1
+        return True
+
+    # -- alloc / reclaim / release ----------------------------------------
+    def _alloc(self) -> int:
+        if not self._free:
+            self._reclaim_one()
+        blk = self._free.pop()
+        self.refcount[blk] = 1
+        return blk
+
+    def _reclaim_one(self):
+        """Evict the least-recently-used refcount-0 cached block."""
+        for h in self._index:                     # front = LRU
+            blk, _ = self._index[h]
+            if self.refcount[blk] == 0:
+                del self._index[h]
+                del self._block_hash[blk]
+                self._free.append(blk)
+                return
+        raise RuntimeError(
+            "block pool exhausted: no free or reclaimable blocks "
+            "(admission/reservation accounting bug)")
+
+    def release(self, slot: int):
+        """Return the slot's blocks: decref shared blocks; refcount-0
+        blocks stay cached if indexed, else go back to the free list."""
+        for j in range(self.max_blocks):
+            blk = int(self.block_tables[slot, j])
+            if blk < 0:
+                continue
+            self.refcount[blk] -= 1
+            assert self.refcount[blk] >= 0, (slot, j, blk)
+            if self.refcount[blk] == 0 and blk not in self._block_hash:
+                self._free.append(blk)
+        self.block_tables[slot, :] = -1
+        self._total_reserved -= int(self._reserved[slot])
+        self._reserved[slot] = 0
+        super().release(slot)
+
+    # -- reporting ---------------------------------------------------------
+    def prefix_stats(self) -> Dict:
+        return {
+            "hits": self.prefix_hits,
+            "misses": self.prefix_misses,
+            "hit_tokens": self.prefix_hit_tokens,
+            "indexed_blocks": len(self._index),
+            "cached_blocks": self.cached_blocks,
+        }

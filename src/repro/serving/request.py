@@ -43,6 +43,14 @@ class RequestMetrics:
     t_finish: Optional[float] = None
     prompt_tokens: int = 0
     output_tokens: int = 0
+    # paged-KV serving: how the request hit the cache / pool.
+    # prefilled_tokens < prompt_tokens means a prefix-cache hit skipped
+    # the difference; kv_allocated vs kv_used is the fragmentation
+    # signal (contiguous slots allocate cache_len regardless of use).
+    prefilled_tokens: Optional[int] = None
+    prefix_cached_tokens: int = 0
+    kv_allocated_bytes: Optional[int] = None
+    kv_used_bytes: Optional[int] = None
 
     @property
     def queue_wait(self) -> Optional[float]:
@@ -74,6 +82,10 @@ class RequestMetrics:
             "queue_wait_s": self.queue_wait,
             "ttft_s": self.ttft,
             "tpot_s": self.tpot,
+            "prefilled_tokens": self.prefilled_tokens,
+            "prefix_cached_tokens": self.prefix_cached_tokens,
+            "kv_allocated_bytes": self.kv_allocated_bytes,
+            "kv_used_bytes": self.kv_used_bytes,
         }
 
 

@@ -162,6 +162,17 @@ def test_softcap(softcap):
     _check(q, k, v, qp, kp, softcap=softcap, block_k=32)
 
 
+@pytest.mark.parametrize("T,block_k", [(40, 16), (33, 32), (7, 512)])
+def test_cache_len_not_divisible_by_block_k(T, block_k):
+    """Regression: T % block_k != 0 used to raise NotImplementedError;
+    the tail split is now padded with masked (-1 position) columns."""
+    B, H, K, d = 2, 8, 2, 16
+    q, k, v = _decode_inputs(B, T, H, K, d, seed=21)
+    qp = jnp.full((B, 1), T, jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(T), (B, T))
+    _check(q, k, v, qp, kp, block_k=block_k)
+
+
 def test_fully_masked_row_returns_zeros():
     """A slot with no live key (fresh ring) must emit zeros, not NaNs or
     a garbage mean-of-v (dead splits carry l == 0 into the epilogue)."""
