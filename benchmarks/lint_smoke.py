@@ -1,0 +1,41 @@
+"""Lint smoke — the static-analysis pass over the real tree, timed.
+
+Runs :func:`repro.analysis.lint_paths` over ``src`` / ``benchmarks`` /
+``examples`` exactly as the CI ``lint`` job does, and FAILS if any
+finding survives the committed (empty) baseline — so the benchmark
+smoke catches a dirty tree even when the dedicated CI job is skipped.
+The emitted row records wall time and files/findings counts so a
+pathological slowdown of the AST pass (it runs on every PR) is visible
+in the CSV history.
+
+    PYTHONPATH=src python -m benchmarks.run --only lint
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+
+from benchmarks.common import emit
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run():
+    from repro.analysis import lint_paths
+    from repro.analysis.baseline import DEFAULT_BASELINE, filter_new, load
+
+    t0 = time.perf_counter()
+    result = lint_paths([REPO / "src", REPO / "benchmarks",
+                         REPO / "examples"], root=REPO)
+    us = (time.perf_counter() - t0) * 1e6
+    known = load(REPO / DEFAULT_BASELINE)
+    fresh = filter_new(result.findings, result.source_lines, known)
+    emit("lint.tree", us,
+         f"files={result.files} findings={len(fresh)}")
+    if fresh:
+        for f in fresh:
+            print(f"#   {f.render()}")
+        raise AssertionError(
+            f"{len(fresh)} lint finding(s) not in the baseline")
+    if result.errors:
+        raise AssertionError(f"lint I/O errors: {result.errors}")

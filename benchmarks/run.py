@@ -28,6 +28,7 @@ SUITES = [
     ("roofline", "benchmarks.roofline_table"),      # §Roofline
     ("plan", "benchmarks.plan_scorecard"),          # parallelism planner
     ("canary", "benchmarks.dryrun_canary"),         # dry-run artifact drift
+    ("lint", "benchmarks.lint_smoke"),              # static-analysis gate
 ]
 
 

@@ -1,0 +1,16 @@
+"""repro.analysis — JAX/Pallas-aware static analysis for this repo.
+
+An AST lint pass encoding the bug classes this codebase has actually
+shipped (see README "Static analysis"): host syncs inside jit (RL001),
+nondeterministic RNG construction (RL002), recompile hazards at jitted
+call sites (RL003), Pallas call-contract violations (RL004), and lock
+discipline in the threaded modules (RL005).
+
+    from repro.analysis import lint_paths
+    result = lint_paths([pathlib.Path("src")])
+
+CLI (the CI gate): ``python -m repro.analysis`` — exit 0 clean,
+1 findings, 2 usage error.
+"""
+from repro.analysis.engine import LintResult, lint_paths  # noqa: F401
+from repro.analysis.visitor import Finding, Rule, all_rules, register  # noqa: F401

@@ -1,0 +1,75 @@
+"""Finding fingerprints and the committed baseline file.
+
+A fingerprint identifies a finding across unrelated edits: it hashes
+the rule id, the file path, the enclosing symbol, and the *text* of the
+flagged line (whitespace-normalized) — not the line number, so code
+moving above a finding does not churn the baseline.  Identical lines in
+the same symbol are disambiguated by occurrence index.
+
+The baseline file is a sorted JSON list of fingerprint records.  The
+workflow:
+
+  * ``--write-baseline`` snapshots today's findings (the ratchet),
+  * ``--baseline`` hides baselined findings and fails only on NEW ones,
+  * fixing a finding leaves a stale record; ``--write-baseline`` again
+    to shrink it.  This repo's committed baseline is EMPTY — the tree
+    lints clean — so the gate is simply "no findings".
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+from typing import Dict, List, Sequence, Tuple
+
+from repro.analysis.visitor import Finding
+
+DEFAULT_BASELINE = pathlib.Path("experiments") / "lint_baseline.json"
+
+
+def _line_text(finding: Finding, source_lines: Dict[str, List[str]]) -> str:
+    lines = source_lines.get(finding.path, [])
+    if 1 <= finding.line <= len(lines):
+        return " ".join(lines[finding.line - 1].split())
+    return ""
+
+
+def fingerprints(findings: Sequence[Finding],
+                 source_lines: Dict[str, List[str]]) -> List[str]:
+    """One stable fingerprint per finding (order-aligned with input)."""
+    seen: Dict[Tuple[str, str, str, str], int] = {}
+    out = []
+    for f in findings:
+        key = (f.rule, f.path, f.symbol, _line_text(f, source_lines))
+        n = seen.get(key, 0)
+        seen[key] = n + 1
+        digest = hashlib.sha1(
+            "\x1f".join([*key, str(n)]).encode()).hexdigest()[:16]
+        out.append(digest)
+    return out
+
+
+def load(path: pathlib.Path) -> List[str]:
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    return [rec["fingerprint"] for rec in data.get("findings", [])]
+
+
+def write(path: pathlib.Path, findings: Sequence[Finding],
+          source_lines: Dict[str, List[str]]) -> None:
+    recs = [{"fingerprint": fp, "rule": f.rule, "path": f.path,
+             "symbol": f.symbol, "message": f.message}
+            for f, fp in zip(findings, fingerprints(findings, source_lines))]
+    recs.sort(key=lambda r: (r["path"], r["rule"], r["fingerprint"]))
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps({"findings": recs}, indent=2) + "\n")
+
+
+def filter_new(findings: Sequence[Finding],
+               source_lines: Dict[str, List[str]],
+               baselined: Sequence[str]) -> List[Finding]:
+    known = set(baselined)
+    return [f for f, fp in zip(findings,
+                               fingerprints(findings, source_lines))
+            if fp not in known]

@@ -1,0 +1,110 @@
+"""``python -m repro.analysis`` — the CI lint gate.
+
+    python -m repro.analysis                      # src benchmarks examples
+    python -m repro.analysis src/repro/serving    # subset
+    python -m repro.analysis --json               # machine-readable
+    python -m repro.analysis --baseline           # hide baselined findings
+    python -m repro.analysis --write-baseline     # ratchet current state
+    python -m repro.analysis --select RL002,RL004 # subset of rules
+    python -m repro.analysis --list-rules
+
+Exit codes: 0 clean, 1 findings, 2 usage error (unknown flag/rule,
+missing path).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import List, Optional
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.engine import lint_paths
+from repro.analysis.visitor import all_rules
+
+DEFAULT_PATHS = ["src", "benchmarks", "examples"]
+EXIT_CLEAN, EXIT_FINDINGS, EXIT_USAGE = 0, 1, 2
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX/Pallas-aware static analysis for this repo")
+    p.add_argument("paths", nargs="*", default=None,
+                   help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit findings as JSON")
+    p.add_argument("--select", default=None, metavar="RL001,RL002",
+                   help="run only these rule ids")
+    p.add_argument("--baseline", nargs="?", metavar="FILE",
+                   const=str(baseline_mod.DEFAULT_BASELINE), default=None,
+                   help="suppress findings recorded in FILE "
+                        f"(default {baseline_mod.DEFAULT_BASELINE})")
+    p.add_argument("--write-baseline", nargs="?", metavar="FILE",
+                   const=str(baseline_mod.DEFAULT_BASELINE), default=None,
+                   help="record current findings as the new baseline")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule table and exit")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = build_parser()
+    args = parser.parse_args(argv)          # argparse exits 2 on bad usage
+
+    if args.list_rules:
+        for cls in all_rules():
+            print(f"{cls.id}  {cls.name:24s} {cls.rationale}")
+        return EXIT_CLEAN
+
+    raw_paths = args.paths or DEFAULT_PATHS
+    paths = [pathlib.Path(p) for p in raw_paths]
+    missing = [str(p) for p in paths if not p.exists()]
+    if missing:
+        print(f"error: no such path(s): {', '.join(missing)}",
+              file=sys.stderr)
+        return EXIT_USAGE
+
+    select = [s for s in (args.select or "").split(",") if s] or None
+    try:
+        result = lint_paths(paths, select=select)
+    except ValueError as e:                 # unknown rule id
+        print(f"error: {e}", file=sys.stderr)
+        return EXIT_USAGE
+
+    findings = result.findings
+    if args.write_baseline is not None:
+        out = pathlib.Path(args.write_baseline)
+        baseline_mod.write(out, findings, result.source_lines)
+        print(f"wrote {len(findings)} finding(s) to {out}")
+        return EXIT_CLEAN
+
+    stale = 0
+    if args.baseline is not None:
+        known = baseline_mod.load(pathlib.Path(args.baseline))
+        before = len(findings)
+        findings = baseline_mod.filter_new(findings, result.source_lines,
+                                           known)
+        stale = len(known) - (before - len(findings))
+
+    if args.as_json:
+        print(json.dumps({
+            "files": result.files,
+            "findings": [{"rule": f.rule, "path": f.path, "line": f.line,
+                          "col": f.col, "symbol": f.symbol,
+                          "message": f.message} for f in findings],
+        }, indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        summary = (f"{len(findings)} finding(s) in {result.files} file(s)"
+                   if findings else f"clean: {result.files} file(s) linted")
+        if stale > 0:
+            summary += (f" ({stale} stale baseline entr"
+                        f"{'y' if stale == 1 else 'ies'} — re-run "
+                        "--write-baseline to shrink it)")
+        print(summary)
+    for err in result.errors:
+        print(f"warning: {err}", file=sys.stderr)
+    return EXIT_FINDINGS if findings else EXIT_CLEAN

@@ -1,0 +1,130 @@
+"""Lint engine: file walking, rule dispatch, suppressions.
+
+``lint_paths`` is the programmatic entry (the CLI, the benchmark smoke
+and the tests all call it): walk ``*.py`` files under the given paths,
+parse each once, run every registered rule over its
+:class:`ModuleContext`, then drop findings suppressed by pragma.
+
+Suppression syntax (per-line):
+
+  * trailing — ``x = risky()  # repro-lint: disable=RL002``
+  * standalone comment line — applies to the next non-comment line::
+
+        # repro-lint: disable=RL004  (pool dims are whole blocks)
+        out = pl.pallas_call(...)
+
+Multiple ids separate with commas; ``disable=all`` silences every rule
+on that line.  Suppressions are deliberate, reviewable markers — the
+baseline file (``repro.analysis.baseline``) is for debt you intend to
+burn down, pragmas for findings that are wrong or justified forever.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+from repro.analysis.visitor import (Finding, ModuleContext, Rule, all_rules,
+                                    build_context)
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9,\s]+)")
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules",
+              "lint_fixtures"}
+
+
+@dataclass
+class LintResult:
+    findings: List[Finding] = field(default_factory=list)
+    files: int = 0
+    errors: List[str] = field(default_factory=list)
+    # path -> source lines (baseline fingerprints hash the flagged line)
+    source_lines: Dict[str, List[str]] = field(default_factory=dict)
+
+
+def iter_py_files(paths: Sequence[pathlib.Path]) -> Iterable[pathlib.Path]:
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                # skip-dirs apply to subdirectories discovered under the
+                # given root, never to the root the caller asked for
+                rel_dirs = f.relative_to(p).parts[:-1]
+                if not any(part in _SKIP_DIRS for part in rel_dirs):
+                    yield f
+
+
+def suppressions_for(lines: List[str]) -> Dict[int, Set[str]]:
+    """lineno -> suppressed rule ids (uppercased; 'ALL' wildcard)."""
+    out: Dict[int, Set[str]] = {}
+    pending: Optional[Set[str]] = None
+    for i, text in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        stripped = text.strip()
+        if m:
+            ids = {t.strip().upper() for t in m.group(1).split(",")
+                   if t.strip()}
+            if stripped.startswith("#"):
+                pending = (pending or set()) | ids   # applies to next code line
+            else:
+                out.setdefault(i, set()).update(ids)
+            continue
+        if pending is not None and stripped and not stripped.startswith("#"):
+            out.setdefault(i, set()).update(pending)
+            pending = None
+    return out
+
+
+def _suppressed(finding: Finding, supp: Dict[int, Set[str]]) -> bool:
+    ids = supp.get(finding.line)
+    return bool(ids) and (finding.rule.upper() in ids or "ALL" in ids)
+
+
+def lint_file(path: pathlib.Path, rules: Sequence[Rule],
+              result: LintResult, root: Optional[pathlib.Path] = None):
+    try:
+        source = path.read_text(encoding="utf-8")
+    except OSError as e:
+        result.errors.append(f"{path}: unreadable ({e})")
+        return
+    rel = str(path.relative_to(root)) if root and path.is_relative_to(root) \
+        else str(path)
+    try:
+        ctx = build_context(rel, source)
+    except SyntaxError as e:
+        result.findings.append(Finding(
+            rule="RL000", path=rel, line=e.lineno or 1,
+            col=(e.offset or 0) + 1, message=f"syntax error: {e.msg}",
+            symbol="<module>"))
+        result.source_lines[rel] = source.splitlines()
+        result.files += 1
+        return
+    supp = suppressions_for(ctx.lines)
+    for rule in rules:
+        for f in rule.check(ctx):
+            if not _suppressed(f, supp):
+                result.findings.append(f)
+    result.source_lines[rel] = ctx.lines
+    result.files += 1
+
+
+def lint_paths(paths: Sequence[pathlib.Path],
+               select: Optional[Sequence[str]] = None,
+               root: Optional[pathlib.Path] = None) -> LintResult:
+    rule_classes = all_rules()
+    if select is not None:
+        wanted = {s.upper() for s in select}
+        known = {c.id for c in rule_classes}
+        unknown = wanted - known
+        if unknown:
+            raise ValueError(f"unknown rule id(s) {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
+        rule_classes = [c for c in rule_classes if c.id in wanted]
+    rules = [c() for c in rule_classes]
+    result = LintResult()
+    for f in iter_py_files(paths):
+        lint_file(f, rules, result, root=root)
+    result.findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return result

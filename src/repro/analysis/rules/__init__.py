@@ -1,0 +1,8 @@
+"""Rule pack — importing this package registers every rule.
+
+Add a rule by dropping a module here that defines a
+``repro.analysis.visitor.Rule`` subclass decorated with ``@register``,
+and importing it below (registration is the import side effect).
+"""
+from repro.analysis.rules import (host_sync, locks, pallas_contract,  # noqa: F401
+                                  recompile, rng)

@@ -1,0 +1,150 @@
+"""RL001 — host-device sync inside jit-compiled code.
+
+``.item()`` / ``float(tracer)`` / ``np.asarray(tracer)`` /
+``jax.device_get`` inside a jitted function either fails at trace time
+or, worse, silently forces a host round-trip per step (the
+recompile/stall class the PR 2 serving redesign was fixing).  The rule
+finds the module's jit roots, walks the intra-module call graph, and
+flags host-sync constructs in any reachable function body.
+
+Jit roots are:
+  * defs decorated ``@jax.jit`` / ``@partial(jax.jit, ...)``,
+  * local defs passed to ``jax.jit(f)``,
+  * inner defs returned by a local factory passed as ``jax.jit(make_f(...))``
+    (the ``make_generate_step`` pattern),
+  * defs carrying a ``# repro-lint: jit-root`` pragma (for functions
+    jitted from another module, where static resolution cannot see it).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional
+
+from repro.analysis.visitor import (Finding, ModuleContext, Rule, register,
+                                    is_constant_expr)
+
+_JIT_NAMES = {"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"}
+_NUMPY_CONVERTERS = {"numpy.asarray", "numpy.array"}
+
+
+def _is_jit_ref(ctx: ModuleContext, node: ast.expr) -> bool:
+    return ctx.dotted(node) in _JIT_NAMES
+
+
+def _jit_decorated(ctx: ModuleContext, fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        if _is_jit_ref(ctx, dec):
+            return True
+        if isinstance(dec, ast.Call):
+            if _is_jit_ref(ctx, dec.func):
+                return True
+            # @partial(jax.jit, ...) / @functools.partial(jax.jit, ...)
+            name = ctx.dotted(dec.func)
+            if name in ("functools.partial", "partial") and dec.args and \
+                    _is_jit_ref(ctx, dec.args[0]):
+                return True
+    return False
+
+
+def _has_jit_root_pragma(ctx: ModuleContext, fn: ast.AST) -> bool:
+    for ln in (fn.lineno, fn.lineno - 1):
+        if "repro-lint: jit-root" in ctx.line_text(ln):
+            return True
+    return False
+
+
+def _returned_inner_defs(ctx: ModuleContext, factory: ast.AST) -> List[ast.AST]:
+    """Inner defs a factory returns (``return step`` / ``return`` a def)."""
+    out = []
+    for node in ast.walk(factory):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Name) \
+                and ctx.func_of(node) is factory:
+            qn = ctx.qualname(factory)
+            inner = ctx.functions.get(f"{qn}.<locals>.{node.value.id}")
+            if inner is not None:
+                out.append(inner)
+    return out
+
+
+def jit_roots(ctx: ModuleContext) -> List[ast.AST]:
+    roots: List[ast.AST] = []
+    for fn in ctx.functions.values():
+        if _jit_decorated(ctx, fn) or _has_jit_root_pragma(ctx, fn):
+            roots.append(fn)
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and _is_jit_ref(ctx, node.func)
+                and node.args):
+            continue
+        arg = node.args[0]
+        enclosing = ctx.func_of(node) or ctx.tree
+        if isinstance(arg, ast.Name):
+            target = ctx.functions.get(arg.id)
+            if target is None and enclosing is not ctx.tree:
+                qn = ctx.qualname(enclosing)
+                target = ctx.functions.get(f"{qn}.<locals>.{arg.id}")
+            if target is not None:
+                roots.append(target)
+        elif isinstance(arg, ast.Call) and isinstance(arg.func, ast.Name):
+            factory = ctx.functions.get(arg.func.id)
+            if factory is not None:
+                roots.extend(_returned_inner_defs(ctx, factory))
+    return roots
+
+
+def _param_names(fn: ast.AST) -> set:
+    a = fn.args
+    names = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    return names - {"self", "cls"}
+
+
+@register
+class HostSyncRule(Rule):
+    id = "RL001"
+    name = "host-sync-in-jit"
+    rationale = ("host round-trips inside jit fail at trace time or "
+                 "stall the device every step")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        roots = jit_roots(ctx)
+        if not roots:
+            return
+        reachable = ctx.reachable_from(roots)
+        for fn in ctx.functions.values():
+            if id(fn) not in reachable:
+                continue
+            params = _param_names(fn)
+            for node in ast.walk(fn):
+                # stay inside this function body (inner defs are visited
+                # as their own entries when reachable)
+                if ctx.func_of(node) is not fn:
+                    continue
+                msg = self._host_sync(ctx, node, params)
+                if msg:
+                    yield self.finding(
+                        ctx, node,
+                        f"{msg} in jit-reachable `{fn.name}` — forces a "
+                        "host-device sync (hoist out of the jitted step "
+                        "or keep it as jnp)")
+
+    def _host_sync(self, ctx: ModuleContext, node: ast.AST,
+                   params: set) -> Optional[str]:
+        if not isinstance(node, ast.Call):
+            return None
+        name = ctx.call_name(node)
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "item" and not node.args:
+            return "`.item()`"
+        if name in ("jax.device_get", "jax.block_until_ready"):
+            return f"`{name}(...)`"
+        if name in _NUMPY_CONVERTERS and node.args and \
+                not is_constant_expr(node.args[0]):
+            return f"`{ctx.raw_dotted(node.func)}(...)` on a traced value"
+        if name in ("float", "int", "bool") and len(node.args) == 1 and \
+                isinstance(node.args[0], ast.Name) and \
+                node.args[0].id in params:
+            return f"`{name}()` on parameter `{node.args[0].id}`"
+        return None

@@ -1,0 +1,106 @@
+"""RL005 — lock discipline in threaded classes.
+
+For any class that guards state with a lock (``with self._lock:``),
+an attribute assigned both inside a lock block in one method and
+outside any lock block in another is a data race: the unguarded write
+can interleave with the guarded read-modify-write (the PR 5 Prefetcher
+thread leak was exactly an unguarded shared flag).  ``__init__`` writes
+are exempt — construction happens before the object is shared.
+
+The rule keys on attributes whose name ends with ``lock`` used as a
+``with`` context (``self._lock`` / ``self.state_lock``), so ordinary
+context managers don't trigger it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Set, Tuple
+
+from repro.analysis.visitor import Finding, ModuleContext, Rule, register
+
+
+def _self_attr(node: ast.expr) -> str:
+    """'attr' for a ``self.attr`` expression, else ''."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return ""
+
+
+def _lock_names(cls: ast.ClassDef) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(cls):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                attr = _self_attr(item.context_expr)
+                if attr.lower().endswith("lock"):
+                    names.add(attr)
+    return names
+
+
+@register
+class LockDisciplineRule(Rule):
+    id = "RL005"
+    name = "lock-discipline"
+    rationale = ("an attribute written both under and outside the lock "
+                 "races with the guarded path")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(ctx, node)
+
+    def _check_class(self, ctx: ModuleContext,
+                     cls: ast.ClassDef) -> Iterator[Finding]:
+        locks = _lock_names(cls)
+        if not locks:
+            return
+        # attr -> (locked write sites, unlocked write sites)
+        writes: Dict[str, Tuple[list, list]] = {}
+        for method in cls.body:
+            if not isinstance(method, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                continue
+            init = method.name == "__init__"
+            for node in ast.walk(method):
+                for attr, site in self._attr_writes(node):
+                    if attr in locks:
+                        continue
+                    locked = self._under_lock(ctx, site, locks, method)
+                    if init and not locked:
+                        continue          # pre-publication construction
+                    writes.setdefault(attr, ([], []))[0 if locked else 1] \
+                        .append((site, method.name))
+        for attr, (locked_sites, bare_sites) in sorted(writes.items()):
+            if not locked_sites or not bare_sites:
+                continue
+            guarded_in = sorted({m for _, m in locked_sites})
+            for site, meth in bare_sites:
+                yield self.finding(
+                    ctx, site,
+                    f"`self.{attr}` is written without the lock in "
+                    f"`{meth}` but under it in "
+                    f"`{'`, `'.join(guarded_in)}` — take the lock (or "
+                    "document why this write cannot race)")
+
+    def _attr_writes(self, node: ast.AST):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                attr = _self_attr(t)
+                if attr:
+                    yield attr, t
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            attr = _self_attr(node.target)
+            if attr:
+                yield attr, node.target
+
+    def _under_lock(self, ctx: ModuleContext, node: ast.AST,
+                    locks: Set[str], method: ast.AST) -> bool:
+        for anc in ctx.ancestors(node):
+            if anc is method:
+                break
+            if isinstance(anc, (ast.With, ast.AsyncWith)):
+                for item in anc.items:
+                    if _self_attr(item.context_expr) in locks:
+                        return True
+        return False

@@ -1,0 +1,184 @@
+"""RL004 — Pallas call-contract checks.
+
+The ``pl.pallas_call`` invariants that only explode at lowering time
+(or worse, on TPU silicon with an opaque Mosaic error), checked
+statically at the call site:
+
+  * **index-map arity** — every ``BlockSpec`` index map must take
+    exactly ``grid rank`` arguments (plus ``num_scalar_prefetch`` when
+    the specs live in a ``PrefetchScalarGridSpec``),
+  * **index-map rank** — the tuple an index map returns must have one
+    entry per block-shape dimension,
+  * **out_shape/out_specs parity** — the number of ``out_shape``
+    entries must match the number of ``out_specs``,
+  * **divisibility discipline** — a kernel wrapper that blocks an axis
+    must either guard/pad non-divisible shapes (any ``%`` arithmetic in
+    the wrapper counts: a guard-raise, a pad computation, or a mask) or
+    carry an explicit ``# repro-lint: divisible`` pragma stating why
+    every caller's shapes divide exactly (the PR 6 paged-decode pool is
+    the canonical case: pool dims are whole blocks by construction).
+
+Grid/spec expressions are resolved through single-assignment local
+names (``grid = (B, H, nc)``; ``grid_spec = pltpu.PrefetchScalarGridSpec
+(...)``), matching how this repo's six call sites are written.
+Unresolvable dynamic constructs are skipped, not guessed at.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Tuple
+
+from repro.analysis.visitor import (Finding, ModuleContext, Rule, register,
+                                    const_int, lambda_arity)
+
+_PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+_BLOCK_SPEC = "jax.experimental.pallas.BlockSpec"
+_PREFETCH_SPECS = {
+    "jax.experimental.pallas.tpu.PrefetchScalarGridSpec",
+    "jax.experimental.pallas.GridSpec",
+}
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _resolve(ctx: ModuleContext, expr: Optional[ast.expr],
+             scope: ast.AST) -> Optional[ast.expr]:
+    """Chase a Name through its single local assignment."""
+    if isinstance(expr, ast.Name):
+        return ctx.resolve_local(expr.id, scope)
+    return expr
+
+
+def _spec_list(expr: Optional[ast.expr]) -> Optional[List[ast.expr]]:
+    """A specs/shapes operand as a list (single spec -> [spec])."""
+    if expr is None:
+        return None
+    if isinstance(expr, (ast.List, ast.Tuple)):
+        return list(expr.elts)
+    return [expr]
+
+
+def _block_spec_parts(ctx: ModuleContext, spec: ast.expr) \
+        -> Tuple[Optional[int], Optional[int], Optional[ast.expr]]:
+    """(block_rank, index_map_arity, index_map_node) of one BlockSpec."""
+    if not (isinstance(spec, ast.Call)
+            and ctx.dotted(spec.func) == _BLOCK_SPEC):
+        return None, None, None
+    rank = None
+    if spec.args and isinstance(spec.args[0], (ast.Tuple, ast.List)):
+        rank = len(spec.args[0].elts)
+    imap = spec.args[1] if len(spec.args) > 1 else _kwarg(spec, "index_map")
+    return rank, lambda_arity(imap) if imap is not None else None, imap
+
+
+def _index_map_out_rank(imap: ast.expr) -> Optional[int]:
+    if isinstance(imap, ast.Lambda):
+        body = imap.body
+        if isinstance(body, (ast.Tuple, ast.List)):
+            return len(body.elts)
+        return 1
+    return None
+
+
+@register
+class PallasContractRule(Rule):
+    id = "RL004"
+    name = "pallas-contract"
+    rationale = ("BlockSpec/grid mismatches fail only at lowering (or on "
+                 "device); divisibility bugs read garbage tail blocks")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and \
+                    ctx.dotted(node.func) == _PALLAS_CALL:
+                yield from self._check_site(ctx, node)
+
+    def _check_site(self, ctx: ModuleContext,
+                    call: ast.Call) -> Iterator[Finding]:
+        scope = ctx.func_of(call) or ctx.tree
+        grid_rank: Optional[int] = None
+        prefetch = 0
+        in_specs = _spec_list(_resolve(ctx, _kwarg(call, "in_specs"), scope))
+        out_specs_expr = _kwarg(call, "out_specs")
+        out_shape_expr = _kwarg(call, "out_shape")
+
+        grid_spec = _resolve(ctx, _kwarg(call, "grid_spec"), scope)
+        if isinstance(grid_spec, ast.Call) and \
+                ctx.dotted(grid_spec.func) in _PREFETCH_SPECS:
+            n = _kwarg(grid_spec, "num_scalar_prefetch")
+            prefetch = const_int(n) or 0 if n is not None else 0
+            in_specs = _spec_list(
+                _resolve(ctx, _kwarg(grid_spec, "in_specs"), scope))
+            out_specs_expr = _kwarg(grid_spec, "out_specs")
+            grid = _resolve(ctx, _kwarg(grid_spec, "grid"), scope)
+        else:
+            grid = _resolve(ctx, _kwarg(call, "grid"), scope)
+
+        if isinstance(grid, (ast.Tuple, ast.List)):
+            grid_rank = len(grid.elts)
+        out_specs = _spec_list(_resolve(ctx, out_specs_expr, scope))
+        out_shapes = _spec_list(_resolve(ctx, out_shape_expr, scope))
+
+        # -- out_shape / out_specs parity --------------------------------
+        if out_specs is not None and out_shapes is not None and \
+                len(out_specs) != len(out_shapes):
+            yield self.finding(
+                ctx, call,
+                f"pallas_call declares {len(out_shapes)} out_shape "
+                f"entr{'y' if len(out_shapes) == 1 else 'ies'} but "
+                f"{len(out_specs)} out_specs — outputs and their "
+                "BlockSpecs must pair 1:1")
+
+        # -- per-BlockSpec arity/rank ------------------------------------
+        want = None if grid_rank is None else grid_rank + prefetch
+        for label, specs in (("in_specs", in_specs),
+                             ("out_specs", out_specs)):
+            for j, spec in enumerate(specs or []):
+                rank, arity, imap = _block_spec_parts(ctx, spec)
+                if arity is not None and want is not None and arity != want:
+                    yield self.finding(
+                        ctx, spec,
+                        f"{label}[{j}] index_map takes {arity} args but the "
+                        f"grid has rank {grid_rank}"
+                        + (f" (+{prefetch} scalar-prefetch operand"
+                           f"{'s' if prefetch > 1 else ''})"
+                           if prefetch else "")
+                        + f" — expected {want}")
+                out_rank = _index_map_out_rank(imap) if imap is not None \
+                    else None
+                if rank is not None and out_rank is not None and \
+                        out_rank != rank:
+                    yield self.finding(
+                        ctx, spec,
+                        f"{label}[{j}] index_map returns {out_rank} "
+                        f"coordinate{'s' if out_rank != 1 else ''} for a "
+                        f"{rank}-d block shape — one coordinate per block "
+                        "dimension")
+
+        # -- divisibility discipline -------------------------------------
+        if not self._has_divisibility_guard(ctx, scope):
+            yield self.finding(
+                ctx, call,
+                "pallas_call wrapper has no divisibility guard: block "
+                "shapes that do not divide the array silently read/write "
+                "out-of-range tails — guard or pad with `%` arithmetic, "
+                "or add a `# repro-lint: divisible` pragma explaining why "
+                "shapes always divide")
+
+    def _has_divisibility_guard(self, ctx: ModuleContext,
+                                scope: ast.AST) -> bool:
+        for node in ast.walk(scope):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mod):
+                return True
+            if isinstance(node, ast.AugAssign) and \
+                    isinstance(node.op, ast.Mod):
+                return True
+        lo = getattr(scope, "lineno", 1)
+        hi = getattr(scope, "end_lineno", len(ctx.lines))
+        return any("repro-lint: divisible" in ctx.line_text(i)
+                   for i in range(lo, hi + 1))

@@ -1,0 +1,164 @@
+"""RL003 — recompile hazard: varying Python scalars into a jitted callable.
+
+A jitted function traced on a Python int/float specializes on the VALUE
+(weak-typed constant), so a call site that feeds it a varying scalar —
+a loop counter, `len(...)`, `int(...)` of runtime state — compiles a
+fresh executable per distinct value: the recompile storm that dominates
+small iterative debugging jobs (SAKURAONE §7's dominant job class).
+
+The rule records the module's jitted bindings —
+
+  * ``f = jax.jit(g)`` / ``self._f = jax.jit(...)`` assignments (with
+    their ``static_argnums`` / ``static_argnames``),
+  * ``@jax.jit``-decorated defs,
+
+— then inspects every call site of those bindings.  An argument is
+flagged when it is a *varying* Python scalar expression (loop-carried
+name, ``int()/float()/len()`` result, arithmetic over such) in a
+position not covered by the static argnums/argnames.  Constants are
+fine (one value, one compile); arrays are fine (shape/dtype
+specialization only).  Fix: pass ``jnp.asarray(x)`` or declare the
+argument static.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.visitor import (Finding, ModuleContext, Rule, register,
+                                    const_int)
+from repro.analysis.rules.host_sync import _is_jit_ref, _jit_decorated
+
+_SCALAR_CALLS = {"int", "float", "bool", "len", "round", "min", "max", "sum"}
+
+
+class _JitBinding:
+    def __init__(self, static_nums: Set[int], static_names: Set[str]):
+        self.static_nums = static_nums
+        self.static_names = static_names
+
+
+def _static_sets(call: ast.Call) -> Tuple[Set[int], Set[str]]:
+    nums: Set[int] = set()
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            vals = kw.value.elts if isinstance(
+                kw.value, (ast.Tuple, ast.List)) else [kw.value]
+            for v in vals:
+                i = const_int(v)
+                if i is not None:
+                    nums.add(i)
+        elif kw.arg == "static_argnames":
+            vals = kw.value.elts if isinstance(
+                kw.value, (ast.Tuple, ast.List)) else [kw.value]
+            for v in vals:
+                if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                    names.add(v.value)
+    return nums, names
+
+
+def _loop_targets(ctx: ModuleContext, node: ast.AST) -> Set[str]:
+    """Names provably bound to Python SCALARS by enclosing For loops:
+    ``for i in range(...)`` targets and the index element of
+    ``for i, x in enumerate(...)``.  A plain ``for x in xs`` target may
+    be an array — never flagged."""
+    out: Set[str] = set()
+    for loop in ctx.loop_ancestors(node):
+        if not isinstance(loop, (ast.For, ast.AsyncFor)):
+            continue
+        it = loop.iter
+        fn = ctx.call_name(it) if isinstance(it, ast.Call) else None
+        if fn == "range":
+            for t in ast.walk(loop.target):
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+        elif fn == "enumerate" and isinstance(loop.target, ast.Tuple) and \
+                loop.target.elts and \
+                isinstance(loop.target.elts[0], ast.Name):
+            out.add(loop.target.elts[0].id)
+    return out
+
+
+def _varying_scalar(ctx: ModuleContext, expr: ast.expr,
+                    loop_names: Set[str]) -> Optional[str]:
+    """Why ``expr`` is a varying Python scalar, or None."""
+    if isinstance(expr, ast.Name) and expr.id in loop_names:
+        return f"loop variable `{expr.id}`"
+    if isinstance(expr, ast.Call):
+        name = ctx.call_name(expr)
+        if name in _SCALAR_CALLS:
+            return f"Python scalar `{name}(...)`"
+        return None
+    if isinstance(expr, ast.BinOp):
+        return (_varying_scalar(ctx, expr.left, loop_names)
+                or _varying_scalar(ctx, expr.right, loop_names))
+    if isinstance(expr, ast.UnaryOp):
+        return _varying_scalar(ctx, expr.operand, loop_names)
+    return None
+
+
+@register
+class RecompileRule(Rule):
+    id = "RL003"
+    name = "recompile-hazard"
+    rationale = ("each distinct Python scalar value recompiles the "
+                 "jitted callable")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        bindings = self._jit_bindings(ctx)
+        if not bindings:
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = ctx.raw_dotted(node.func)
+            binding = bindings.get(callee) if callee else None
+            if binding is None:
+                continue
+            loop_names = _loop_targets(ctx, node)
+            for i, arg in enumerate(node.args):
+                if i in binding.static_nums or isinstance(arg, ast.Starred):
+                    continue
+                why = _varying_scalar(ctx, arg, loop_names)
+                if why:
+                    yield self.finding(
+                        ctx, arg,
+                        f"{why} passed to jitted `{callee}` (arg {i}) — "
+                        "each new value triggers a recompile; pass "
+                        "jnp.asarray(...) or add it to static_argnums")
+            for kw in node.keywords:
+                if kw.arg is None or kw.arg in binding.static_names:
+                    continue
+                why = _varying_scalar(ctx, kw.value, loop_names)
+                if why:
+                    yield self.finding(
+                        ctx, kw.value,
+                        f"{why} passed to jitted `{callee}` "
+                        f"(kwarg `{kw.arg}`) — each new value triggers a "
+                        "recompile; pass jnp.asarray(...) or add it to "
+                        "static_argnames")
+
+    def _jit_bindings(self, ctx: ModuleContext) -> Dict[str, _JitBinding]:
+        out: Dict[str, _JitBinding] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.value, ast.Call) and \
+                    _is_jit_ref(ctx, node.value.func):
+                target = ctx.raw_dotted(node.targets[0])
+                if target is not None:
+                    nums, names = _static_sets(node.value)
+                    out[target] = _JitBinding(nums, names)
+        for fn in ctx.functions.values():
+            if _jit_decorated(ctx, fn):
+                nums, names = set(), set()
+                for dec in fn.decorator_list:
+                    if isinstance(dec, ast.Call):
+                        n, s = _static_sets(dec)
+                        nums |= n
+                        names |= s
+                out[fn.name] = _JitBinding(nums, names)
+        return out
+
+    # decorated methods would need `self` offset handling; module-level
+    # defs and jit-assignment bindings cover this repo's idiom

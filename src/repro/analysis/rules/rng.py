@@ -1,0 +1,107 @@
+"""RL002 — nondeterministic or constant-stream RNG construction.
+
+The bug class this repo has actually shipped (the PR 1 string-hash
+straggler RNG; the ``simulation.py`` per-call ``default_rng(job.id)``
+jitter): randomness that is either process-dependent (unseeded), drawn
+from interpreter-global state, or re-seeded so often that the "random"
+stream is a constant.  Four patterns:
+
+  * **unseeded** ``np.random.default_rng()`` / ``random.Random()`` —
+    different values every process; irreproducible experiments,
+  * **chained draw** ``np.random.default_rng(key).draw(...)`` with a
+    non-constant key — a fresh generator drawn once returns the SAME
+    value on every call with that key (the seed *is* the value),
+  * **loop reconstruction** — building a generator from an empty or
+    constant seed inside a loop replays an identical stream every
+    iteration,
+  * **global-state draws** ``np.random.uniform(...)`` / stdlib
+    ``random.random()`` — shared mutable state, order-dependent across
+    call sites and threads.
+
+The fix in every case: thread ONE seeded generator (or a
+``SeedSequence``-spawned per-key stream) through the call path.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.visitor import (Finding, ModuleContext, Rule, register,
+                                    is_constant_expr)
+
+_CTOR_NAMES = {"numpy.random.default_rng", "random.Random"}
+_NP_GLOBAL_DRAWS = {
+    "random", "rand", "randn", "randint", "random_sample", "ranf",
+    "choice", "shuffle", "permutation", "uniform", "normal",
+    "standard_normal", "exponential", "poisson", "lognormal", "zipf",
+    "integers", "beta", "gamma", "binomial", "seed",
+}
+_STDLIB_DRAWS = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "betavariate",
+    "expovariate", "seed",
+}
+
+
+@register
+class RngRule(Rule):
+    id = "RL002"
+    name = "nondeterministic-rng"
+    rationale = ("fresh/global RNG state makes runs irreproducible or "
+                 "silently constant")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = ctx.call_name(node)
+            if name is None:
+                continue
+            if name in _CTOR_NAMES:
+                yield from self._check_ctor(ctx, node, name)
+            elif name.startswith("numpy.random.") and \
+                    name.rsplit(".", 1)[1] in _NP_GLOBAL_DRAWS:
+                yield self.finding(
+                    ctx, node,
+                    f"global-state draw `{ctx.raw_dotted(node.func)}(...)` — "
+                    "uses the shared numpy RNG (order-dependent across call "
+                    "sites/threads); draw from a seeded Generator instead")
+            elif name.startswith("random.") and \
+                    name.rsplit(".", 1)[1] in _STDLIB_DRAWS and \
+                    name.count(".") == 1:
+                yield self.finding(
+                    ctx, node,
+                    f"global-state draw `{ctx.raw_dotted(node.func)}(...)` — "
+                    "uses the interpreter-global stdlib RNG; use a seeded "
+                    "`random.Random(seed)` (or numpy Generator) instance")
+
+    def _check_ctor(self, ctx: ModuleContext, node: ast.Call,
+                    name: str) -> Iterator[Finding]:
+        spelled = ctx.raw_dotted(node.func)
+        seeded = bool(node.args or node.keywords)
+        if not seeded:
+            yield self.finding(
+                ctx, node,
+                f"unseeded `{spelled}()` — seeds from OS entropy, so every "
+                "process draws a different stream; pass an explicit seed "
+                "(derive per-object streams via np.random.SeedSequence)")
+            return
+        parent = ctx.parent_of(node)
+        if isinstance(parent, ast.Attribute) and \
+                isinstance(ctx.parent_of(parent), ast.Call) and \
+                not all(is_constant_expr(a) for a in node.args):
+            yield self.finding(
+                ctx, node,
+                f"fresh `{spelled}(...).{parent.attr}(...)` — a generator "
+                "re-seeded per call returns the IDENTICAL value on every "
+                "draw for the same key; thread a persistent seeded "
+                "generator (or SeedSequence-spawned stream) instead")
+            return
+        if ctx.loop_ancestors(node) and \
+                all(is_constant_expr(a) for a in node.args):
+            yield self.finding(
+                ctx, node,
+                f"`{spelled}(...)` constructed with a fixed seed inside a "
+                "loop — every iteration replays the identical stream; "
+                "construct once outside the loop or key the seed per "
+                "iteration")

@@ -1,0 +1,287 @@
+"""Shared AST infrastructure for the lint rules.
+
+One :class:`ModuleContext` is built per linted file and handed to every
+rule.  It provides the services the rules share:
+
+  * parent links (``parent_of``) and lexical helpers (``func_of``,
+    ``class_of``, ``loop_ancestors``),
+  * import-alias resolution (``dotted`` maps ``np.random.default_rng``
+    through ``import numpy as np`` to ``numpy.random.default_rng``) so
+    rules match canonical names, not spellings,
+  * local function tables and an intra-module call graph
+    (``reachable_from``) — the basis of the jit-reachability analysis,
+  * simple single-assignment resolution inside a function
+    (``resolve_local``), used to chase ``grid = (B, H, nc)`` /
+    ``grid_spec = pltpu.PrefetchScalarGridSpec(...)`` through a name.
+
+Rules subclass :class:`Rule` and register with :func:`register`; the
+engine instantiates the registry once per run.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Set, Tuple, Type
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint finding.  ``symbol`` is the enclosing def/class (for
+    baseline fingerprints that survive line drift)."""
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    symbol: str = ""
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+class Rule:
+    """Base class: one instance per run, ``check(ctx)`` yields Findings."""
+
+    id: str = "RL000"
+    name: str = "unnamed"
+    rationale: str = ""
+
+    def check(self, ctx: "ModuleContext") -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: "ModuleContext", node: ast.AST,
+                message: str) -> Finding:
+        fn = ctx.func_of(node)
+        cls = ctx.class_of(node)
+        symbol = ".".join(n for n in ((cls.name if cls else ""),
+                                      (fn.name if fn else "")) if n)
+        return Finding(rule=self.id, path=ctx.path,
+                       line=getattr(node, "lineno", 0),
+                       col=getattr(node, "col_offset", 0) + 1,
+                       message=message, symbol=symbol or "<module>")
+
+
+_REGISTRY: List[Type[Rule]] = []
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    _REGISTRY.append(cls)
+    return cls
+
+
+def all_rules() -> List[Type[Rule]]:
+    # import for side effect: each rule module registers itself
+    from repro.analysis import rules as _rules  # noqa: F401
+    return sorted(_REGISTRY, key=lambda c: c.id)
+
+
+# ---------------------------------------------------------------------------
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+_LOOP_NODES = (ast.For, ast.AsyncFor, ast.While)
+
+
+class ModuleContext:
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree
+        self._parent: Dict[int, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self._parent[id(child)] = node
+        self.aliases = self._collect_aliases()
+        # qualname -> def node, for module-level defs, methods, and
+        # one-level nested defs (factory pattern)
+        self.functions: Dict[str, ast.AST] = {}
+        self._collect_functions(tree, prefix="")
+
+    # -- structure ---------------------------------------------------------
+    def parent_of(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parent.get(id(node))
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self.parent_of(node)
+        while cur is not None:
+            yield cur
+            cur = self.parent_of(cur)
+
+    def func_of(self, node: ast.AST) -> Optional[ast.AST]:
+        """Nearest enclosing function def (not counting ``node`` itself)."""
+        for anc in self.ancestors(node):
+            if isinstance(anc, _FUNC_NODES):
+                return anc
+        return None
+
+    def class_of(self, node: ast.AST) -> Optional[ast.ClassDef]:
+        for anc in self.ancestors(node):
+            if isinstance(anc, ast.ClassDef):
+                return anc
+        return None
+
+    def loop_ancestors(self, node: ast.AST) -> List[ast.AST]:
+        """For/While ancestors below the nearest enclosing function."""
+        out = []
+        for anc in self.ancestors(node):
+            if isinstance(anc, _FUNC_NODES):
+                break
+            if isinstance(anc, _LOOP_NODES):
+                out.append(anc)
+        return out
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    # -- names -------------------------------------------------------------
+    def _collect_aliases(self) -> Dict[str, str]:
+        aliases: Dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    aliases[a.asname or a.name.split(".")[0]] = \
+                        a.name if a.asname else a.name.split(".")[0]
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+        return aliases
+
+    def raw_dotted(self, node: ast.AST) -> Optional[str]:
+        """``a.b.c`` spelling of a Name/Attribute chain, else None."""
+        parts: List[str] = []
+        cur = node
+        while isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        if isinstance(cur, ast.Name):
+            parts.append(cur.id)
+            return ".".join(reversed(parts))
+        return None
+
+    def dotted(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted name with import aliases resolved:
+        ``np.random.default_rng`` -> ``numpy.random.default_rng``."""
+        raw = self.raw_dotted(node)
+        if raw is None:
+            return None
+        head, _, rest = raw.partition(".")
+        base = self.aliases.get(head, head)
+        return f"{base}.{rest}" if rest else base
+
+    def call_name(self, call: ast.Call) -> Optional[str]:
+        return self.dotted(call.func)
+
+    # -- function table / call graph ----------------------------------------
+    def _collect_functions(self, node: ast.AST, prefix: str):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, _FUNC_NODES):
+                qn = f"{prefix}{child.name}"
+                self.functions[qn] = child
+                self._collect_functions(child, prefix=f"{qn}.<locals>.")
+            elif isinstance(child, ast.ClassDef):
+                self._collect_functions(child, prefix=f"{child.name}.")
+            elif not isinstance(child, _FUNC_NODES):
+                self._collect_functions(child, prefix=prefix)
+
+    def qualname(self, func: ast.AST) -> str:
+        for qn, node in self.functions.items():
+            if node is func:
+                return qn
+        return getattr(func, "name", "<module>")
+
+    def resolve_call_target(self, call: ast.Call,
+                            caller: ast.AST) -> Optional[ast.AST]:
+        """Resolve a call inside ``caller`` to a local def, lexically:
+        inner defs of the caller first, then methods of the caller's
+        class (``self.x()``), then module-level defs."""
+        func = call.func
+        if isinstance(func, ast.Name):
+            name = func.id
+            caller_qn = self.qualname(caller)
+            inner = self.functions.get(f"{caller_qn}.<locals>.{name}")
+            if inner is not None:
+                return inner
+            return self.functions.get(name)
+        if isinstance(func, ast.Attribute) and \
+                isinstance(func.value, ast.Name) and func.value.id == "self":
+            cls = self.class_of(caller) if not isinstance(caller, ast.Module) \
+                else None
+            if cls is not None:
+                return self.functions.get(f"{cls.name}.{func.attr}")
+        return None
+
+    def reachable_from(self, roots: List[ast.AST]) -> Set[int]:
+        """ids of function defs reachable from ``roots`` through the
+        intra-module call graph (including the roots)."""
+        seen: Set[int] = set()
+        stack = list(roots)
+        while stack:
+            fn = stack.pop()
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            qn = self.qualname(fn)
+            for node in ast.walk(fn):
+                target = None
+                if isinstance(node, ast.Call):
+                    target = self.resolve_call_target(node, fn)
+                elif isinstance(node, ast.Name) and \
+                        isinstance(node.ctx, ast.Load):
+                    # an inner def referenced by name (lax.scan(body, ...),
+                    # jax.vmap(f)) is traced too
+                    target = self.functions.get(f"{qn}.<locals>.{node.id}")
+                if target is not None and id(target) not in seen:
+                    stack.append(target)
+        return seen
+
+    # -- local single-assignment resolution ----------------------------------
+    def resolve_local(self, name: str, scope: ast.AST,
+                      before: Optional[ast.AST] = None) -> Optional[ast.expr]:
+        """RHS of the single plain assignment binding ``name`` in
+        ``scope`` (a function def or the module).  Returns None if the
+        name is bound zero or multiple times (ambiguous)."""
+        hits: List[ast.expr] = []
+        for node in ast.walk(scope):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name) and \
+                    node.targets[0].id == name:
+                # don't escape into nested defs
+                fn = self.func_of(node)
+                if fn is scope or (scope is self.tree and fn is None):
+                    hits.append(node.value)
+        return hits[0] if len(hits) == 1 else None
+
+
+def build_context(path: str, source: str) -> ModuleContext:
+    tree = ast.parse(source, filename=path)
+    return ModuleContext(path, source, tree)
+
+
+# ---------------------------------------------------------------------------
+def lambda_arity(node: ast.expr) -> Optional[int]:
+    if isinstance(node, ast.Lambda):
+        a = node.args
+        return len(a.args) + len(a.posonlyargs)
+    return None
+
+
+def const_int(node: ast.expr) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    return None
+
+
+def is_constant_expr(node: ast.expr) -> bool:
+    """Literal constants, and containers of them."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(is_constant_expr(e) for e in node.elts)
+    if isinstance(node, ast.UnaryOp):
+        return is_constant_expr(node.operand)
+    return False

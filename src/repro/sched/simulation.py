@@ -33,6 +33,7 @@ from repro.sched.workload import (DAY, HOUR, Job, JobClass, JobState,
                                   ProjectWorkload)
 
 _STRAGGLER_STREAM = 0x57A6   # SeedSequence spawn key for straggler draws
+_FAILJITTER_STREAM = 0xFA11  # SeedSequence spawn key for early-fail jitter
 
 
 class Simulation:
@@ -67,6 +68,13 @@ class Simulation:
             np.random.SeedSequence([_STRAGGLER_STREAM,
                                     fault_seed if fault_seed is not None
                                     else seed]))
+        # per-job early-failure jitter streams: persistent seeded
+        # generators keyed by job id, so successive draws for one job
+        # differ (a fresh default_rng(job.id) per draw would return the
+        # identical "jitter" every time) while staying deterministic
+        # per (seed, job id) and independent of self.rng's fault stream
+        self._fail_seed = fault_seed if fault_seed is not None else seed
+        self._fail_rngs: Dict[int, np.random.Generator] = {}
         # per-job collective traffic split by fabric locality (Table 10)
         self.collective_bytes = 0.0
         self.cross_pod_bytes = 0.0
@@ -77,10 +85,18 @@ class Simulation:
     def _push(self, t: float, kind: str, payload: tuple = ()):
         self.events.push(t, kind, payload)
 
+    def _fail_jitter(self, job: Job) -> float:
+        """Hours until an early-failing job dies, from its seeded stream."""
+        rng = self._fail_rngs.get(job.id)
+        if rng is None:
+            rng = self._fail_rngs[job.id] = np.random.default_rng(
+                np.random.SeedSequence(
+                    [_FAILJITTER_STREAM, self._fail_seed, job.id]))
+        return float(rng.exponential(0.1))
+
     def schedule_job_end(self, job: Job):
         if job.fails_early:
-            dt = min(float(np.random.default_rng(job.id).exponential(0.1)),
-                     job.duration)
+            dt = min(self._fail_jitter(job), job.duration)
             self._push(self.now + dt, "job_fail", (job.id,))
         else:
             self._push(self.now + job.remaining, "job_end", (job.id,))

@@ -1,0 +1,23 @@
+"""RL001 true positive: host syncs reachable from jit roots."""
+import jax
+import numpy as np
+
+
+def _log_metrics(metrics):
+    return np.asarray(metrics)          # reachable from jitted step
+
+
+def make_step():
+    def step(params, grads):
+        lr = grads.sum().item()         # host sync inside jit
+        _log_metrics(lr)
+        return params, float(lr)
+    return step
+
+
+@jax.jit
+def decorated(x):
+    return jax.device_get(x)            # host sync inside jit
+
+
+train = jax.jit(make_step())

@@ -1,0 +1,13 @@
+"""RL001 clean: host syncs stay outside the jit boundary."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(params, grads):
+    return params - 1e-3 * grads
+
+
+def driver(params, grads):
+    params = step(params, grads)
+    return float(np.asarray(jax.device_get(params))[0])   # host side: fine

@@ -1,0 +1,30 @@
+"""RL002 true positives: every nondeterministic-RNG pattern."""
+import random
+
+import numpy as np
+
+
+def service_time(job_id):
+    # fresh generator drawn once: the SAME value on every call
+    return np.random.default_rng(job_id).exponential(0.1)
+
+
+def make_noise(n):
+    rng = np.random.default_rng()       # unseeded: process-dependent
+    return rng.standard_normal(n)
+
+
+def jitter_all(jobs):
+    out = []
+    for _ in jobs:
+        rng = np.random.default_rng(0)  # same stream every iteration
+        out.append(rng.uniform())
+    return out
+
+
+def pick(items):
+    return random.choice(items)         # interpreter-global state
+
+
+def global_draw(n):
+    return np.random.uniform(size=n)    # shared numpy global state

@@ -1,0 +1,18 @@
+"""RL002 clean: one seeded generator, threaded; per-key SeedSequence."""
+import numpy as np
+
+
+class Sim:
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+        self._streams = {}
+
+    def service_time(self, job_id):
+        rng = self._streams.get(job_id)
+        if rng is None:
+            rng = self._streams[job_id] = np.random.default_rng(
+                np.random.SeedSequence([7, job_id]))
+        return rng.exponential(0.1)
+
+    def jitter_all(self, jobs):
+        return [self.rng.uniform() for _ in jobs]

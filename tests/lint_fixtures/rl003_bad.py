@@ -1,0 +1,17 @@
+"""RL003 true positives: varying Python scalars into a jitted callable."""
+import jax
+
+
+def train_step(params, batch, scale):
+    return jax.tree.map(lambda p: p * scale, params)
+
+
+step = jax.jit(train_step)
+
+
+def run(params, batches):
+    for i, batch in enumerate(batches):
+        # loop counter and a len() both recompile on every new value
+        params = step(params, batch, i)
+        params = step(params, batch, scale=len(batch))
+    return params

@@ -1,0 +1,18 @@
+"""RL003 clean: scalars declared static, or passed as arrays."""
+import jax
+import jax.numpy as jnp
+
+
+def train_step(params, batch, scale):
+    return jax.tree.map(lambda p: p * scale, params)
+
+
+step = jax.jit(train_step, static_argnums=(2,), static_argnames=("scale",))
+
+
+def run(params, batches):
+    for i, batch in enumerate(batches):
+        params = step(params, batch, len(batch))       # static: fine
+        params = step(params, batch, scale=i)          # static: fine
+        params = jax.jit(train_step)(params, batch, jnp.asarray(i))  # array
+    return params

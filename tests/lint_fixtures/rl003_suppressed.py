@@ -1,0 +1,15 @@
+"""RL003 suppressed: a knowingly-bounded recompile (2 values ever)."""
+import jax
+
+
+def train_step(params, batch, is_final):
+    return jax.tree.map(lambda p: p * (0.5 if is_final else 1.0), params)
+
+
+step = jax.jit(train_step)
+
+
+def run(params, batches):
+    for i, batch in enumerate(batches):
+        params = step(params, batch, i)  # repro-lint: disable=RL003
+    return params

@@ -1,0 +1,19 @@
+"""RL004 true positives: every pallas_call contract violation."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def double(x):
+    rows, cols = x.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(rows // 8, cols // 128),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i,)),
+        out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype),
+                   jax.ShapeDtypeStruct(x.shape, x.dtype)],
+    )(x)

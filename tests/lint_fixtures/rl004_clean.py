@@ -1,0 +1,21 @@
+"""RL004 clean: arity, rank, parity and a divisibility guard all line up."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def double(x):
+    rows, cols = x.shape
+    if rows % 8 or cols % 128:
+        raise NotImplementedError("dims not divisible by block")
+    grid = (rows // 8, cols // 128)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

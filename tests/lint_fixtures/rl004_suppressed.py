@@ -1,0 +1,22 @@
+"""RL004 suppressed: shapes divide by construction, stated via pragma."""
+import jax
+from jax.experimental import pallas as pl
+
+BLOCK = 128
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def double_pool(pool):
+    # pool is allocated as whole (BLOCK, BLOCK) tiles upstream
+    # repro-lint: divisible (pool dims are whole blocks by construction)
+    nb = pool.shape[0] // BLOCK
+    return pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((BLOCK, BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+    )(pool)

@@ -1,0 +1,21 @@
+"""RL005 true positive: a guarded attribute written without the lock."""
+import threading
+
+
+class Telemetry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.total = 0
+        self.pending = None
+
+    def add(self, n):
+        with self._lock:
+            self.total += n
+
+    def flush(self):
+        with self._lock:
+            self.pending = self.total
+
+    def reset(self):
+        self.total = 0          # races with add()'s read-modify-write
+        self.pending = None     # races with flush()

@@ -1,0 +1,16 @@
+"""RL005 clean: every post-construction write holds the lock."""
+import threading
+
+
+class Telemetry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.total = 0
+
+    def add(self, n):
+        with self._lock:
+            self.total += n
+
+    def reset(self):
+        with self._lock:
+            self.total = 0
