@@ -39,3 +39,19 @@ def run():
             f"{len(fresh)} lint finding(s) not in the baseline")
     if result.errors:
         raise AssertionError(f"lint I/O errors: {result.errors}")
+
+    # the semantic rules alone (abstract interpretation of every
+    # pallas_call site + the live plan/registry audit) — timed separately
+    # because they do real work per kernel body, unlike the pattern rules
+    t0 = time.perf_counter()
+    sem = lint_paths([REPO / "src", REPO / "benchmarks",
+                      REPO / "examples"], root=REPO,
+                     select=["RL006", "RL007", "RL008", "RL009", "RL010"])
+    us = (time.perf_counter() - t0) * 1e6
+    emit("lint.semantic", us,
+         f"files={sem.files} findings={len(sem.findings)}")
+    if sem.findings:
+        for f in sem.findings:
+            print(f"#   {f.render()}")
+        raise AssertionError(
+            f"{len(sem.findings)} semantic finding(s) on the tree")

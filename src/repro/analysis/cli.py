@@ -3,24 +3,29 @@
     python -m repro.analysis                      # src benchmarks examples
     python -m repro.analysis src/repro/serving    # subset
     python -m repro.analysis --json               # machine-readable
+    python -m repro.analysis --format sarif       # code-scanning upload
     python -m repro.analysis --baseline           # hide baselined findings
     python -m repro.analysis --write-baseline     # ratchet current state
     python -m repro.analysis --select RL002,RL004 # subset of rules
+    python -m repro.analysis --changed-only       # files changed vs HEAD
+    python -m repro.analysis --changed-only main  # ... vs a ref
     python -m repro.analysis --list-rules
 
 Exit codes: 0 clean, 1 findings, 2 usage error (unknown flag/rule,
-missing path).
+missing path, git failure under --changed-only).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import subprocess
 import sys
-from typing import List, Optional
+from typing import List, Optional, Set
 
 from repro.analysis import baseline as baseline_mod
 from repro.analysis.engine import lint_paths
+from repro.analysis.sarif import render_sarif
 from repro.analysis.visitor import all_rules
 
 DEFAULT_PATHS = ["src", "benchmarks", "examples"]
@@ -34,9 +39,16 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("paths", nargs="*", default=None,
                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
     p.add_argument("--json", action="store_true", dest="as_json",
-                   help="emit findings as JSON")
+                   help="emit findings as JSON (alias for --format json)")
+    p.add_argument("--format", choices=("text", "json", "sarif"),
+                   default=None, dest="fmt",
+                   help="output format (default text)")
     p.add_argument("--select", default=None, metavar="RL001,RL002",
                    help="run only these rule ids")
+    p.add_argument("--changed-only", nargs="?", metavar="REF",
+                   const="HEAD", default=None, dest="changed_only",
+                   help="lint only files changed vs REF (default HEAD) "
+                        "plus untracked files — the pre-commit fast path")
     p.add_argument("--baseline", nargs="?", metavar="FILE",
                    const=str(baseline_mod.DEFAULT_BASELINE), default=None,
                    help="suppress findings recorded in FILE "
@@ -49,6 +61,21 @@ def build_parser() -> argparse.ArgumentParser:
     return p
 
 
+def changed_files(ref: str) -> Set[pathlib.Path]:
+    """Resolved paths of files changed vs ``ref`` plus untracked files.
+    Raises CalledProcessError/OSError when git is unusable."""
+    out: Set[pathlib.Path] = set()
+    for cmd in (["git", "diff", "--name-only", ref, "--"],
+                ["git", "ls-files", "--others", "--exclude-standard"]):
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              check=True)
+        for line in proc.stdout.splitlines():
+            line = line.strip()
+            if line:
+                out.add(pathlib.Path(line).resolve())
+    return out
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     parser = build_parser()
     args = parser.parse_args(argv)          # argparse exits 2 on bad usage
@@ -58,6 +85,8 @@ def main(argv: Optional[List[str]] = None) -> int:
             print(f"{cls.id}  {cls.name:24s} {cls.rationale}")
         return EXIT_CLEAN
 
+    fmt = args.fmt or ("json" if args.as_json else "text")
+
     raw_paths = args.paths or DEFAULT_PATHS
     paths = [pathlib.Path(p) for p in raw_paths]
     missing = [str(p) for p in paths if not p.exists()]
@@ -66,9 +95,21 @@ def main(argv: Optional[List[str]] = None) -> int:
               file=sys.stderr)
         return EXIT_USAGE
 
+    only_files: Optional[Set[pathlib.Path]] = None
+    if args.changed_only is not None:
+        try:
+            only_files = changed_files(args.changed_only)
+        except (subprocess.CalledProcessError, OSError) as e:
+            detail = ""
+            if isinstance(e, subprocess.CalledProcessError) and e.stderr:
+                detail = f": {e.stderr.strip()}"
+            print(f"error: --changed-only could not resolve "
+                  f"{args.changed_only!r} via git{detail}", file=sys.stderr)
+            return EXIT_USAGE
+
     select = [s for s in (args.select or "").split(",") if s] or None
     try:
-        result = lint_paths(paths, select=select)
+        result = lint_paths(paths, select=select, only_files=only_files)
     except ValueError as e:                 # unknown rule id
         print(f"error: {e}", file=sys.stderr)
         return EXIT_USAGE
@@ -88,7 +129,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                                            known)
         stale = len(known) - (before - len(findings))
 
-    if args.as_json:
+    if fmt == "sarif":
+        print(render_sarif(findings))
+    elif fmt == "json":
         print(json.dumps({
             "files": result.files,
             "findings": [{"rule": f.rule, "path": f.path, "line": f.line,

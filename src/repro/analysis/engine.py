@@ -26,8 +26,8 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Set
 
-from repro.analysis.visitor import (Finding, ModuleContext, Rule, all_rules,
-                                    build_context)
+from repro.analysis.visitor import (Finding, ModuleContext, ProjectRule,
+                                    Rule, all_rules, build_context)
 
 _SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9,\s]+)")
 _SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules",
@@ -110,9 +110,34 @@ def lint_file(path: pathlib.Path, rules: Sequence[Rule],
     result.files += 1
 
 
+def _run_project_rules(rules: Sequence[Rule], result: LintResult,
+                       root: Optional[pathlib.Path]):
+    """Project rules run once per invocation.  Their findings point at
+    whatever file each rule attributes them to; that file's pragmas are
+    honoured by reading it lazily (it may not be in the walked set)."""
+    supp_cache: Dict[str, Dict[int, Set[str]]] = {}
+    for rule in rules:
+        for f in rule.check_project(root):
+            if f.path not in supp_cache:
+                lines = result.source_lines.get(f.path)
+                if lines is None:
+                    target = (root / f.path) if root else pathlib.Path(f.path)
+                    try:
+                        lines = target.read_text(
+                            encoding="utf-8").splitlines()
+                    except OSError:
+                        lines = []
+                supp_cache[f.path] = suppressions_for(lines)
+            if not _suppressed(f, supp_cache[f.path]):
+                result.findings.append(f)
+
+
 def lint_paths(paths: Sequence[pathlib.Path],
                select: Optional[Sequence[str]] = None,
-               root: Optional[pathlib.Path] = None) -> LintResult:
+               root: Optional[pathlib.Path] = None,
+               only_files: Optional[Set[pathlib.Path]] = None) -> LintResult:
+    """Lint ``paths``.  ``only_files`` (resolved absolute paths)
+    restricts the walk — the ``--changed-only`` pre-commit fast path."""
     rule_classes = all_rules()
     if select is not None:
         wanted = {s.upper() for s in select}
@@ -122,9 +147,15 @@ def lint_paths(paths: Sequence[pathlib.Path],
             raise ValueError(f"unknown rule id(s) {sorted(unknown)}; "
                              f"known: {sorted(known)}")
         rule_classes = [c for c in rule_classes if c.id in wanted]
-    rules = [c() for c in rule_classes]
+    instances = [c() for c in rule_classes]
+    file_rules = [r for r in instances if not getattr(r, "project", False)]
+    project_rules = [r for r in instances if getattr(r, "project", False)]
     result = LintResult()
     for f in iter_py_files(paths):
-        lint_file(f, rules, result, root=root)
+        if only_files is not None and f.resolve() not in only_files:
+            continue
+        lint_file(f, file_rules, result, root=root)
+    if project_rules and (only_files is None or result.files):
+        _run_project_rules(project_rules, result, root)
     result.findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
     return result

@@ -4,5 +4,7 @@ Add a rule by dropping a module here that defines a
 ``repro.analysis.visitor.Rule`` subclass decorated with ``@register``,
 and importing it below (registration is the import side effect).
 """
-from repro.analysis.rules import (host_sync, locks, pallas_contract,  # noqa: F401
-                                  recompile, rng)
+from repro.analysis.rules import (accumulator, dtype_drift,  # noqa: F401
+                                  grid_race, host_sync, locks,
+                                  pallas_contract, plan_consistency,
+                                  recompile, ref_bounds, rng)

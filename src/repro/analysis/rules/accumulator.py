@@ -1,0 +1,84 @@
+"""RL007 — uninitialized-accumulator.
+
+A kernel Ref that accumulates across grid steps — scratch memory, or an
+output block revisited because its ``index_map`` is non-injective in
+some grid dimension — holds garbage on the first visit.  The canonical
+Pallas idiom initializes it under a first-step guard::
+
+    @pl.when(pl.program_id(axis) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += partial        # safe: init happened on step 0
+
+Reading such a Ref (including the implicit read of ``+=``) before any
+init store — either a ``pl.when(<program_id> == 0)``-guarded store or an
+unconditional plain store — consumes uninitialized VMEM.  In interpret
+mode that is NaN; on hardware it is whatever the previous kernel left
+there, which is the worse outcome because it can *pass* small tests.
+
+The rule consumes the abstract interpreter's source-ordered event log:
+for each accumulator candidate, flag the first read that happens while
+no initializing store has been seen.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+from repro.analysis.semantic.interp import KernelSummary, summaries
+from repro.analysis.semantic.pallas import RefInfo
+from repro.analysis.visitor import Finding, ModuleContext, Rule, register
+
+
+def _accumulator_refs(summary: KernelSummary):
+    """Scratch refs, plus output refs revisited across grid steps."""
+    site = summary.site
+    for ref in site.scratch:
+        yield ref
+    if site.grid_rank is None:
+        return
+    for ref in site.outs:
+        imap = ref.index_map
+        if imap is None:
+            continue
+        covered = imap.covered_dims()
+        for dim in range(site.grid_rank):
+            size = site.grid_sizes[dim] if dim < len(site.grid_sizes) \
+                else None
+            if dim not in covered and size != 1:
+                yield ref
+                break
+
+
+@register
+class UninitializedAccumulator(Rule):
+    id = "RL007"
+    name = "uninitialized-accumulator"
+    rationale = ("an accumulator Ref read before its first-step init "
+                 "consumes stale VMEM (NaN under interpret; silent garbage "
+                 "on hardware)")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for summary in summaries(ctx):
+            for ref in _accumulator_refs(summary):
+                finding = self._check_ref(ctx, summary, ref)
+                if finding is not None:
+                    yield finding
+
+    def _check_ref(self, ctx: ModuleContext, summary: KernelSummary,
+                   ref: RefInfo):
+        initialized = False
+        for ev in summary.events_for(ref):
+            if ev.kind == "store" and not ev.aug and \
+                    ev.guard in (None, "when_eq0"):
+                initialized = True
+            elif ev.kind == "load" and not initialized:
+                what = "augmented store reads" if ev.aug else "read of"
+                return self.finding(
+                    ctx, ev.node,
+                    f"{ref.role} ref '{ref.name}' accumulates across grid "
+                    f"steps but the {what} it at line {ev.node.lineno} "
+                    f"happens before any init store — guard an init with "
+                    f"pl.when(pl.program_id(...) == 0) before the first "
+                    f"read")
+        return None

@@ -1,0 +1,76 @@
+"""RL009 — dtype-drift.
+
+Two dtype hazards at kernel stores, both invisible syntactically:
+
+  * **mismatched store** — the inferred dtype of a stored value differs
+    from the target Ref's declared dtype (``out_shape``'s
+    ``ShapeDtypeStruct`` or a scratch ctor).  Pallas rejects implicit
+    casts at ``swap`` time (``ValueError: Invalid dtype for 'swap'``),
+    but only when the kernel actually *runs* on that dtype combination —
+    a bf16 serving config can ship a kernel that every f32 test passed.
+    The ``.astype(o_ref.dtype)`` idiom is recognized through the
+    symbolic ``dtype_of:<ref>`` token, so correctly-cast stores are
+    clean by construction.
+
+  * **laundered precision** — a value that passed through an ``astype``
+    to a lower-precision float and is later stored into a
+    higher-precision accumulator Ref.  The store itself type-checks
+    (bf16 widens to f32 fine), but the bits were already quantized: the
+    f32 accumulator silently holds bf16-grade partial sums.  The
+    abstract domain carries this as the ``narrowed`` mark.
+
+Weak-typed Python scalars (``o_ref[...] = 0.0``) never flag — jax gives
+them the Ref's dtype.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+from repro.analysis.semantic.domain import float_rank
+from repro.analysis.semantic.interp import summaries
+from repro.analysis.visitor import Finding, ModuleContext, Rule, register
+
+
+@register
+class DtypeDrift(Rule):
+    id = "RL009"
+    name = "dtype-drift"
+    rationale = ("a store whose value dtype mismatches the Ref dtype fails "
+                 "only on the dtype combination tests skipped; a narrowed "
+                 "value in a wide accumulator quantizes silently")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for summary in summaries(ctx):
+            for ev in summary.events:
+                if ev.kind != "store" or ev.value is None:
+                    continue
+                ref = ev.ref
+                if ref.role not in ("out", "scratch"):
+                    continue
+                val = ev.value
+                ref_dtype = ref.dtype if ref.dtype is not None else \
+                    (f"dtype_of:{ref.name}" if ref.name else None)
+                # mismatched store: both sides known (or symbolic) and differ
+                if val.dtype is not None and ref_dtype is not None \
+                        and not val.weak and val.dtype != ref_dtype \
+                        and not (val.dtype.startswith("dtype_of:")
+                                 or ref_dtype.startswith("dtype_of:")):
+                    yield self.finding(
+                        ctx, ev.node,
+                        f"stores {val.dtype} into {ref.role} ref "
+                        f"'{ref.name}' declared {ref_dtype} — Pallas "
+                        f"rejects the implicit cast at run time (cast "
+                        f"explicitly with .astype({ref.name}.dtype))")
+                    continue
+                # laundered precision into a wider accumulator
+                ref_rank = float_rank(ref.dtype)
+                nar_rank = float_rank(val.narrowed)
+                if val.narrowed is not None and ref_rank is not None \
+                        and nar_rank is not None and nar_rank < ref_rank:
+                    yield self.finding(
+                        ctx, ev.node,
+                        f"value stored into {ref.dtype} {ref.role} ref "
+                        f"'{ref.name}' was narrowed to {val.narrowed} "
+                        f"earlier in the kernel — the wide accumulator "
+                        f"holds already-quantized bits; keep the chain in "
+                        f"{ref.dtype} and cast only at the final store")

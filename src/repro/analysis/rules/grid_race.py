@@ -1,0 +1,80 @@
+"""RL006 — grid-write-race.
+
+Two grid steps of a ``pallas_call`` that map an *output* block to the
+same coordinates race unless the offending grid dimension is declared
+sequential.  Symbolically: the output's ``index_map`` must be injective
+in every grid dimension, where injectivity in dim ``i`` means some block
+coordinate is affine with a known non-zero coefficient on ``g_i``
+(:mod:`repro.analysis.semantic.indexmap`).  A dimension the map is NOT
+injective in is only safe when
+
+  * its grid extent is statically 1 (no second step exists), or
+  * ``compiler_params`` declares it ``"arbitrary"`` (sequential) via
+    ``dimension_semantics`` — the accumulate-over-revisits contract the
+    flash-attention/GEMM epilogues rely on.
+
+Declaring such a dimension ``"parallel"`` is the hard form of the bug
+(Mosaic is told it may reorder the racing steps); leaving it undeclared
+is the soft form (legal today, silently wrong under a parallel
+schedule) — both are flagged, with different messages.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.semantic.pallas import kernel_sites
+from repro.analysis.visitor import Finding, ModuleContext, Rule, register
+
+
+@register
+class GridWriteRace(Rule):
+    id = "RL006"
+    name = "grid-write-race"
+    rationale = ("an output index_map non-injective in an undeclared grid "
+                 "dimension lets two grid steps write the same block")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for site in kernel_sites(ctx):
+            if site.grid_rank is None:
+                continue
+            for ref in site.outs:
+                imap = ref.index_map
+                if imap is None and ref.spec_node is not site.call:
+                    continue          # unresolvable map: don't guess
+                covered = imap.covered_dims() if imap is not None \
+                    else frozenset()
+                for dim in range(site.grid_rank):
+                    if dim in covered:
+                        continue
+                    size = site.grid_sizes[dim] \
+                        if dim < len(site.grid_sizes) else None
+                    if size == 1:
+                        continue      # a single step cannot race itself
+                    sem = site.semantics_of(dim)
+                    if sem == "arbitrary":
+                        continue      # declared sequential: revisits ordered
+                    node = _anchor(ref, site)
+                    label = f"output #{ref.index}" if ref.name is None \
+                        else f"output ref '{ref.name}'"
+                    if sem == "parallel":
+                        yield self.finding(
+                            ctx, node,
+                            f"{label}: index_map is not injective in grid "
+                            f"dim {dim} (size {size if size is not None else '?'}) "
+                            f"which is declared \"parallel\" — two grid "
+                            f"steps may write the same block in any order")
+                    else:
+                        yield self.finding(
+                            ctx, node,
+                            f"{label}: index_map is not injective in grid "
+                            f"dim {dim} (size {size if size is not None else '?'}) "
+                            f"and dimension_semantics does not declare it "
+                            f"\"arbitrary\" — revisited output blocks race "
+                            f"under a parallel schedule; declare the dim "
+                            f"sequential or make the map injective")
+
+
+def _anchor(ref, site) -> ast.AST:
+    node = ref.spec_node if ref.spec_node is not None else site.call
+    return node if hasattr(node, "lineno") else site.call

@@ -1,0 +1,81 @@
+"""RL010 — plan-rule-consistency (a project rule, not an AST rule).
+
+The sharding rule table (``repro.parallel.sharding._DEFAULT_RULES``),
+the model registry (``repro.configs``), and the plan serializer
+(``ParallelPlan.to_json``/``from_json``) form a contract no type checker
+sees: every logical axis a model produces must have a rule, every rule
+must name an axis somebody produces, every mesh axis must be consumed by
+a rule (or by pipeline staging), and a plan must survive a JSON
+round-trip intact.  PR 6's ``plan_from_layout`` work showed how easily
+these drift — a renamed logical axis leaves a dead rule behind and the
+tensors it used to shard silently replicate, which is a *throughput*
+bug, not a crash.
+
+This rule builds the live inventory once per process
+(:func:`repro.analysis.semantic.registry.gather_live_inventory` —
+builds every registered config abstractly) and runs the pure
+:func:`check_consistency` over it.  Findings are attributed to the
+defining line in ``sharding.py`` / ``plan.py`` so pragmas work.  On a
+stdlib-only interpreter (the CI lint job) the jax import fails and the
+rule soft-skips — the tier-1 jobs still exercise it.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Iterator, Optional
+
+from repro.analysis.visitor import Finding, ProjectRule, register
+
+_SHARDING = pathlib.Path("src/repro/parallel/sharding.py")
+_PLAN = pathlib.Path("src/repro/parallel/plan.py")
+
+# issue kind -> file the defect lives in
+_ATTRIBUTION = {
+    "unproduced-rule-axis": _SHARDING,
+    "unmapped-produced-axis": _SHARDING,
+    "unmapped-mesh-axis": _PLAN,
+    "unknown-mesh-axis": _SHARDING,
+    "roundtrip-drop": _PLAN,
+    "config-build-error": _PLAN,
+}
+
+
+def _find_line(root: pathlib.Path, rel: pathlib.Path,
+               needle: str) -> int:
+    """First line mentioning the subject (quoted axis name preferred),
+    so the finding lands on the defect's definition."""
+    try:
+        lines = (root / rel).read_text(encoding="utf-8").splitlines()
+    except OSError:
+        return 1
+    for pattern in (f'"{needle}"', f"'{needle}'", needle):
+        for i, text in enumerate(lines, start=1):
+            if pattern in text:
+                return i
+    return 1
+
+
+@register
+class PlanRuleConsistency(ProjectRule):
+    id = "RL010"
+    name = "plan-rule-consistency"
+    rationale = ("rule-table axes no config produces, produced axes no "
+                 "rule maps, dead mesh axes, and lossy plan round-trips "
+                 "all silently de-shard tensors")
+
+    def check_project(self, root: Optional[pathlib.Path]
+                      ) -> Iterator[Finding]:
+        root = root or pathlib.Path(".")
+        if not (root / _SHARDING).exists():
+            return                    # not linting this repo's tree
+        try:
+            from repro.analysis.semantic.registry import (
+                check_consistency, gather_live_inventory)
+            inv = gather_live_inventory(root / "src")
+        except ImportError:
+            return                    # runtime registries unavailable
+        for issue in check_consistency(inv):
+            rel = _ATTRIBUTION.get(issue.kind, _PLAN)
+            line = _find_line(root, rel, issue.subject)
+            yield Finding(rule=self.id, path=str(rel), line=line, col=1,
+                          message=issue.message, symbol="<project>")

@@ -1,0 +1,37 @@
+"""RL008 — ref-out-of-bounds.
+
+A static index or slice on a kernel Ref that provably exceeds its
+``BlockSpec`` block shape.  Pallas does not raise here: in interpret
+mode (and in Mosaic's lowering) the access *clamps* to the last valid
+element, so an out-of-bounds store silently overwrites a neighbouring
+row and leaves the intended row unwritten — data corruption with no
+error, the nastiest variant of an indexing bug.
+
+The checks are purely static facts collected by the abstract
+interpreter (:mod:`repro.analysis.semantic.interp`): constant integer
+indices vs the block dim, constant slice bounds, and constant
+``pl.ds(start, size)`` windows.  Anything dynamic is left alone.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+from repro.analysis.semantic.interp import summaries
+from repro.analysis.visitor import Finding, ModuleContext, Rule, register
+
+
+@register
+class RefOutOfBounds(Rule):
+    id = "RL008"
+    name = "ref-out-of-bounds"
+    rationale = ("static indexing beyond a Ref's block shape clamps "
+                 "silently, corrupting a neighbouring element instead of "
+                 "raising")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for summary in summaries(ctx):
+            for issue in summary.bounds:
+                yield self.finding(
+                    ctx, issue.node,
+                    f"{issue.message} — Pallas clamps out-of-bounds "
+                    f"accesses instead of raising")

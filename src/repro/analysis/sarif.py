@@ -1,0 +1,71 @@
+"""SARIF 2.1.0 serialization of lint findings.
+
+GitHub code scanning ingests SARIF: uploading the lint run from CI
+(`github/codeql-action/upload-sarif`) turns every finding into an
+inline annotation on the PR diff, which is where an index-map race
+wants to be seen — next to the BlockSpec, not in a log.
+
+Only the subset code scanning actually renders is emitted: one run, a
+tool descriptor carrying the full rule table (id, name, rationale as
+help text), and one result per finding with a physical location.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Sequence
+
+from repro.analysis.visitor import Finding, all_rules
+
+SARIF_VERSION = "2.1.0"
+SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                "master/Schemata/sarif-schema-2.1.0.json")
+
+
+def to_sarif(findings: Sequence[Finding], *,
+             tool_name: str = "repro.analysis") -> Dict:
+    rule_classes = all_rules()
+    rule_index = {cls.id: i for i, cls in enumerate(rule_classes)}
+    rules = [{
+        "id": cls.id,
+        "name": cls.name,
+        "shortDescription": {"text": cls.name.replace("-", " ")},
+        "fullDescription": {"text": cls.rationale or cls.name},
+        "defaultConfiguration": {"level": "error"},
+    } for cls in rule_classes]
+
+    results: List[Dict] = []
+    for f in findings:
+        result = {
+            "ruleId": f.rule,
+            "level": "error",
+            "message": {"text": f.message},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {"uri": f.path.replace("\\", "/"),
+                                         "uriBaseId": "%SRCROOT%"},
+                    "region": {"startLine": max(f.line, 1),
+                               "startColumn": max(f.col, 1)},
+                },
+                "logicalLocations": [{"name": f.symbol}] if f.symbol else [],
+            }],
+        }
+        if f.rule in rule_index:
+            result["ruleIndex"] = rule_index[f.rule]
+        results.append(result)
+
+    return {
+        "$schema": SARIF_SCHEMA,
+        "version": SARIF_VERSION,
+        "runs": [{
+            "tool": {"driver": {
+                "name": tool_name,
+                "informationUri": "https://github.com/",
+                "rules": rules,
+            }},
+            "results": results,
+        }],
+    }
+
+
+def render_sarif(findings: Sequence[Finding]) -> str:
+    return json.dumps(to_sarif(findings), indent=2)

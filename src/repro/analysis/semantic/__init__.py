@@ -1,0 +1,28 @@
+"""repro.analysis.semantic — abstract interpretation for Pallas kernels.
+
+The syntactic rules (RL001-RL005) check spellings; this sub-package
+checks *meaning*.  Three layers, each usable on its own:
+
+  * :mod:`domain` — an abstract shape/dtype domain (``AbstractValue``)
+    with numpy-style broadcasting over partially-known shapes and a
+    small dtype-promotion lattice,
+  * :mod:`indexmap` — a symbolic algebra over ``BlockSpec`` index-map
+    lambdas: each grid axis becomes a symbol and every returned block
+    coordinate reduces to an affine form (or an opaque residue), from
+    which per-axis injectivity is decided,
+  * :mod:`pallas` — ``pallas_call`` site extraction: resolves the
+    kernel function interprocedurally (direct reference,
+    ``functools.partial`` inline or through a local variable, plain
+    local-variable aliasing), binds every kernel parameter to a
+    :class:`RefInfo` seeded from ``BlockSpec``/``out_shape``/
+    ``scratch_shapes``, and reads ``dimension_semantics`` declarations
+    out of ``compiler_params``.
+
+:mod:`interp` runs the abstract interpreter over a kernel body and
+records every Ref load/store with its guard (``pl.when`` context) and
+abstract value — the substrate for RL007/RL008/RL009.  :mod:`registry`
+is the non-AST side: it audits the live ``repro.parallel`` rule tables
+against the registered model configs (RL010).
+"""
+from repro.analysis.semantic.domain import AbstractValue  # noqa: F401
+from repro.analysis.semantic.pallas import KernelSite, RefInfo, kernel_sites  # noqa: F401

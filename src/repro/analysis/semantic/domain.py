@@ -1,0 +1,176 @@
+"""Abstract shape/dtype domain for kernel-body interpretation.
+
+An :class:`AbstractValue` is what the interpreter knows about one
+expression: a partially-known shape (``None`` marks an unknown extent —
+block shapes like ``(1, 1, G, d)`` resolve to ``(1, 1, None, None)``)
+and a dtype drawn from a small promotion lattice.  Everything degrades
+gracefully: any operation the domain does not model returns
+``AbstractValue.unknown()`` rather than guessing, so downstream rules
+only ever act on facts.
+
+Dtypes are canonical numpy-style names (``"float32"``); a dtype can
+also be the *symbolic* token ``"dtype_of:<ref>"`` — the result of
+evaluating ``o_ref.dtype`` when the out ref's dtype is itself unknown
+(``out_shape=jax.ShapeDtypeStruct(shape, x.dtype)``).  A store of a
+value carrying ``dtype_of:o_ref`` into ``o_ref`` matches by
+construction, which is exactly the ``.astype(o_ref.dtype)`` idiom every
+kernel in this repo uses.
+
+``narrowed`` records precision laundering: a float value that passed
+through an ``astype`` to a *lower*-precision float keeps the low dtype
+name in ``narrowed`` even after later promotions widen it back — RL009
+flags a narrowed value stored into a wider accumulator Ref.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, replace
+from typing import Optional, Tuple
+
+Shape = Optional[Tuple[Optional[int], ...]]
+
+# canonical dtype -> (family, promotion rank); floats promote to the
+# higher rank, int+float promotes to the float, bf16+f16 jumps to f32
+_DTYPES = {
+    "bool": ("b", 0),
+    "int8": ("i", 1), "uint8": ("i", 1),
+    "int16": ("i", 2), "uint16": ("i", 2),
+    "int32": ("i", 3), "uint32": ("i", 3),
+    "int64": ("i", 4), "uint64": ("i", 4),
+    "float8_e4m3fn": ("f", 0), "float8_e5m2": ("f", 0),
+    "bfloat16": ("f", 1), "float16": ("f", 1),
+    "float32": ("f", 2),
+    "float64": ("f", 3),
+}
+
+_ALIASES = {"bool_": "bool", "single": "float32", "double": "float64",
+            "half": "float16"}
+
+
+def canonical_dtype(name: str) -> Optional[str]:
+    name = _ALIASES.get(name, name)
+    return name if name in _DTYPES else None
+
+
+def float_rank(dtype: Optional[str]) -> Optional[int]:
+    info = _DTYPES.get(dtype or "")
+    return info[1] if info and info[0] == "f" else None
+
+
+def is_float(dtype: Optional[str]) -> bool:
+    return float_rank(dtype) is not None
+
+
+def _promote_names(a: str, b: str) -> Optional[str]:
+    if a == b:
+        return a
+    fa, fb = _DTYPES.get(a), _DTYPES.get(b)
+    if fa is None or fb is None:
+        return None
+    (kind_a, rank_a), (kind_b, rank_b) = fa, fb
+    if kind_a == "f" and kind_b == "f":
+        if rank_a == rank_b:          # bfloat16 × float16 → float32
+            return "float32"
+        return a if rank_a > rank_b else b
+    if kind_a == "f":
+        return a
+    if kind_b == "f":
+        return b
+    # int × int / anything involving bool: keep the wider int
+    return a if rank_a >= rank_b else b
+
+
+@dataclass(frozen=True)
+class AbstractValue:
+    """What the interpreter knows about one expression."""
+    shape: Shape = None
+    dtype: Optional[str] = None       # canonical name or "dtype_of:<ref>"
+    weak: bool = False                # Python scalar (jax weak type)
+    narrowed: Optional[str] = None    # lowest float dtype passed through
+
+    @classmethod
+    def unknown(cls) -> "AbstractValue":
+        return cls()
+
+    @classmethod
+    def scalar(cls, dtype: Optional[str] = None,
+               weak: bool = False) -> "AbstractValue":
+        return cls(shape=(), dtype=dtype, weak=weak)
+
+    @property
+    def rank(self) -> Optional[int]:
+        return None if self.shape is None else len(self.shape)
+
+    def with_dtype(self, dtype: Optional[str]) -> "AbstractValue":
+        return replace(self, dtype=dtype, weak=False)
+
+
+def promote(a: AbstractValue, b: AbstractValue) -> AbstractValue:
+    """Abstract result of a broadcasting binary op (``a ⊕ b``)."""
+    shape = broadcast_shapes(a.shape, b.shape)
+    narrowed = _merge_narrowed(a, b)
+    if a.weak and b.weak:
+        return AbstractValue(shape, _promote_names(a.dtype, b.dtype)
+                             if a.dtype and b.dtype else None,
+                             weak=True, narrowed=narrowed)
+    if a.weak:
+        return AbstractValue(shape, b.dtype, narrowed=narrowed)
+    if b.weak:
+        return AbstractValue(shape, a.dtype, narrowed=narrowed)
+    if a.dtype is None or b.dtype is None or \
+            a.dtype.startswith("dtype_of:") or b.dtype.startswith("dtype_of:"):
+        # symbolic/unknown operand: keep it only when both sides agree
+        dtype = a.dtype if a.dtype == b.dtype else None
+        return AbstractValue(shape, dtype, narrowed=narrowed)
+    return AbstractValue(shape, _promote_names(a.dtype, b.dtype),
+                         narrowed=narrowed)
+
+
+def _merge_narrowed(a: AbstractValue, b: AbstractValue) -> Optional[str]:
+    picks = [n for n in (a.narrowed, b.narrowed) if n is not None]
+    if not picks:
+        return None
+    return min(picks, key=lambda n: float_rank(n) or 0)
+
+
+def broadcast_shapes(a: Shape, b: Shape) -> Shape:
+    if a is None or b is None:
+        return None
+    if len(a) < len(b):
+        a, b = b, a
+    b = (1,) * (len(a) - len(b)) + tuple(b)
+    out = []
+    for da, db in zip(a, b):
+        if da == 1:
+            out.append(db)
+        elif db == 1:
+            out.append(da)
+        elif da is None or db is None:
+            out.append(None)
+        elif da == db:
+            out.append(da)
+        else:                         # provably incompatible: give up
+            return None
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# dtype expressions — ``jnp.float32`` / ``"bfloat16"`` / ``x.dtype``
+def dtype_from_expr(ctx, node: ast.expr, ref_dtypes=None) -> Optional[str]:
+    """Resolve a dtype-position expression to a canonical name, a
+    symbolic ``dtype_of:<ref>`` token (``ref_dtypes`` maps known kernel
+    ref names to their dtypes), or None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return canonical_dtype(node.value)
+    if isinstance(node, ast.Attribute) and node.attr == "dtype" and \
+            isinstance(node.value, ast.Name) and ref_dtypes is not None \
+            and node.value.id in ref_dtypes:
+        known = ref_dtypes[node.value.id]
+        return known if known is not None else f"dtype_of:{node.value.id}"
+    dotted = ctx.dotted(node)
+    if dotted:
+        tail = dotted.rsplit(".", 1)[-1]
+        head = dotted.split(".", 1)[0]
+        if head in ("jax", "numpy", "jnp", "np"):
+            return canonical_dtype(tail)
+    return None

@@ -1,0 +1,155 @@
+"""Symbolic index-map algebra over the Pallas grid.
+
+A ``BlockSpec`` index map is a lambda from grid coordinates (plus
+scalar-prefetch operands) to block coordinates.  We evaluate it
+symbolically: each of the first ``grid_rank`` lambda parameters becomes
+the grid symbol ``g_i``; every returned coordinate reduces to either
+
+  * an :class:`Affine` form ``c + Σ coeff_i · g_i`` with *known integer*
+    coefficients (closure constants like ``G`` or ``bk`` have unknown
+    value, so ``g * bk`` is NOT affine-known — it could be ``g·0``), or
+  * an :class:`Opaque` residue that merely records which grid symbols
+    the coordinate depends on (``bt[b, si]`` gathers, ``//``, ``%``,
+    ``jnp.maximum(...)``, …).
+
+Injectivity then has a sound sufficient test: the map is injective in
+grid axis ``i`` iff some coordinate is affine with a known non-zero
+coefficient on ``g_i`` — holding every other symbol fixed, distinct
+``g_i`` values then give distinct block coordinates.  Opaque
+dependencies deliberately do NOT count (the paged-decode gather
+``bt[b, si]`` can map two table entries to the same pool block — the
+exact aliasing RL006 exists to catch on outputs).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Union
+
+
+@dataclass(frozen=True)
+class Affine:
+    """``const + Σ coeffs[i]·g_i`` with known integer coefficients.
+    ``const`` is None when the offset involves closure values (still
+    affine in the grid — offsets never affect injectivity)."""
+    coeffs: Dict[int, int] = field(default_factory=dict)
+    const: Optional[int] = 0
+
+    def deps(self) -> FrozenSet[int]:
+        return frozenset(i for i, c in self.coeffs.items() if c != 0)
+
+
+@dataclass(frozen=True)
+class Opaque:
+    """Unknown function of the recorded grid symbols."""
+    grid_deps: FrozenSet[int] = frozenset()
+
+
+Coord = Union[Affine, Opaque]
+
+
+def _add(a: Coord, b: Coord, sign: int = 1) -> Coord:
+    if isinstance(a, Affine) and isinstance(b, Affine):
+        coeffs = dict(a.coeffs)
+        for i, c in b.coeffs.items():
+            coeffs[i] = coeffs.get(i, 0) + sign * c
+        const = (a.const + sign * b.const
+                 if a.const is not None and b.const is not None else None)
+        return Affine(coeffs, const)
+    return Opaque(_deps(a) | _deps(b))
+
+
+def _deps(c: Coord) -> FrozenSet[int]:
+    return c.deps() if isinstance(c, Affine) else c.grid_deps
+
+
+def _mul(a: Coord, b: Coord) -> Coord:
+    for x, y in ((a, b), (b, a)):
+        if isinstance(x, Affine) and not x.coeffs and x.const is not None:
+            if isinstance(y, Affine):
+                const = (y.const * x.const if y.const is not None else
+                         (0 if x.const == 0 else None))
+                return Affine({i: c * x.const for i, c in y.coeffs.items()},
+                              const)
+            return Opaque(y.grid_deps if x.const != 0 else frozenset())
+    return Opaque(_deps(a) | _deps(b))
+
+
+class _SymEval(ast.NodeVisitor):
+    """Evaluate one index-map body over grid symbols.  ``env`` maps the
+    lambda's parameter names to coordinates (grid params to bare
+    symbols, scalar-prefetch params to opaque-no-deps)."""
+
+    def __init__(self, env: Dict[str, Coord]):
+        self.env = env
+
+    def eval(self, node: ast.expr) -> Coord:
+        if isinstance(node, ast.Name):
+            # closure constants (G, d, nc, …) are grid-independent
+            return self.env.get(node.id, Affine({}, None))
+        if isinstance(node, ast.Constant):
+            if isinstance(node.value, int) and not isinstance(node.value, bool):
+                return Affine({}, node.value)
+            return Affine({}, None)
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            return _mul(Affine({}, -1), self.eval(node.operand))
+        if isinstance(node, ast.BinOp):
+            left, right = self.eval(node.left), self.eval(node.right)
+            if isinstance(node.op, ast.Add):
+                return _add(left, right)
+            if isinstance(node.op, ast.Sub):
+                return _add(left, right, sign=-1)
+            if isinstance(node.op, ast.Mult):
+                return _mul(left, right)
+            # //, %, ... fold grid symbols non-injectively
+            return Opaque(_deps(left) | _deps(right))
+        # calls (jnp.maximum), subscripts (bt[b, si]), attributes, …
+        deps: FrozenSet[int] = frozenset()
+        for child in ast.walk(node):
+            if isinstance(child, ast.Name) and child.id in self.env:
+                deps = deps | _deps(self.env[child.id])
+        return Opaque(deps)
+
+
+@dataclass(frozen=True)
+class IndexMapSummary:
+    coords: List[Coord]
+    grid_rank: int
+
+    def covered_dims(self) -> FrozenSet[int]:
+        """Grid axes the map is provably injective in: some coordinate
+        is affine with a known non-zero coefficient on that symbol."""
+        out = set()
+        for c in self.coords:
+            if isinstance(c, Affine):
+                out.update(i for i, k in c.coeffs.items() if k != 0)
+        return frozenset(out)
+
+    def dep_dims(self) -> FrozenSet[int]:
+        """Grid axes the map depends on in ANY way (incl. opaquely)."""
+        deps: FrozenSet[int] = frozenset()
+        for c in self.coords:
+            deps = deps | _deps(c)
+        return deps
+
+
+def summarize_index_map(imap: ast.expr, grid_rank: int,
+                        num_scalar_prefetch: int = 0
+                        ) -> Optional[IndexMapSummary]:
+    """Symbolically evaluate an index-map lambda.  Returns None when the
+    map is not a lambda or its arity disagrees with the grid (RL004's
+    territory — don't double-report)."""
+    if not isinstance(imap, ast.Lambda):
+        return None
+    params = [a.arg for a in (imap.args.posonlyargs + imap.args.args)]
+    if len(params) != grid_rank + num_scalar_prefetch:
+        return None
+    env: Dict[str, Coord] = {}
+    for i, name in enumerate(params):
+        env[name] = Affine({i: 1}) if i < grid_rank \
+            else Opaque(frozenset())
+    ev = _SymEval(env)
+    body = imap.body
+    elts = list(body.elts) if isinstance(body, (ast.Tuple, ast.List)) \
+        else [body]
+    return IndexMapSummary([ev.eval(e) for e in elts], grid_rank)

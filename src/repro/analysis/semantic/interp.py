@@ -1,0 +1,582 @@
+"""Abstract interpretation of a Pallas kernel body.
+
+Given a resolved :class:`~repro.analysis.semantic.pallas.KernelSite`,
+walk the kernel function in source order and produce a flat event log:
+every Ref load and store, each tagged with
+
+  * the :class:`RefInfo` it touches,
+  * the abstract value stored (for stores), propagated through the
+    shape/dtype domain (``jnp`` elementwise ops, reductions,
+    ``dot_general`` with ``preferred_element_type``, ``astype``, …),
+  * the guard context — ``"when_eq0"`` for statements under a
+    ``@pl.when(<program_id expr> == 0)`` decorator (the canonical
+    accumulator-init idiom), ``"when_other"`` for any other ``pl.when``,
+  * a source-order counter, so "read before first init" is decidable.
+
+Bounds violations (static index/slice provably outside the Ref's block
+shape) are collected during the same pass — in interpret mode those
+stores silently *clamp*, corrupting a neighbouring row, which is why
+RL008 exists.
+
+Control flow is handled conservatively: ``if``/``for``/``while`` bodies
+are interpreted in order under the current guard (a loop body runs "at
+least conceptually once"); branches are not joined — imprecision only
+ever loses facts, never invents them.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.semantic.domain import (AbstractValue, Shape,
+                                            broadcast_shapes, dtype_from_expr,
+                                            float_rank, promote)
+from repro.analysis.semantic.pallas import KernelSite, RefInfo
+from repro.analysis.visitor import ModuleContext, const_int
+
+_PL = "jax.experimental.pallas"
+_DS = {f"{_PL}.ds", f"{_PL}.dslice"}
+
+_UNARY_FLOAT = {"exp", "log", "log2", "tanh", "sqrt", "rsqrt", "erf",
+                "sigmoid", "softplus", "sin", "cos", "logistic",
+                "silu", "gelu", "relu"}
+_UNARY_KEEP = {"abs", "negative", "square", "cumsum", "clip"}
+_BINARY = {"maximum", "minimum", "add", "subtract", "multiply",
+           "divide", "power", "mod", "atan2"}
+_REDUCTIONS = {"sum", "max", "min", "mean", "prod", "amax", "amin", "any",
+               "all"}
+_DOTS = {"jax.lax.dot_general", "jax.lax.dot", "jax.numpy.dot",
+         "jax.numpy.matmul", "jax.numpy.einsum", f"{_PL}.dot"}
+
+
+@dataclass
+class AccessEvent:
+    ref: RefInfo
+    node: ast.AST
+    kind: str                     # "load" | "store"
+    guard: Optional[str]          # None | "when_eq0" | "when_other"
+    aug: bool = False
+    value: Optional[AbstractValue] = None
+    order: int = 0
+
+
+@dataclass
+class BoundsIssue:
+    ref: RefInfo
+    node: ast.AST
+    message: str
+
+
+@dataclass
+class KernelSummary:
+    site: KernelSite
+    events: List[AccessEvent] = field(default_factory=list)
+    bounds: List[BoundsIssue] = field(default_factory=list)
+
+    def events_for(self, ref: RefInfo) -> List[AccessEvent]:
+        return [e for e in self.events if e.ref is ref]
+
+
+# ---------------------------------------------------------------------------
+class _Interp:
+    def __init__(self, ctx: ModuleContext, site: KernelSite):
+        self.ctx = ctx
+        self.site = site
+        self.env: Dict[str, AbstractValue] = {}
+        self.pid_names: Set[str] = set()   # names holding pl.program_id(...)
+        self.summary = KernelSummary(site)
+        self._order = 0
+        # known ref dtypes for ``x.dtype`` resolution in dtype positions
+        self.ref_dtypes: Dict[str, Optional[str]] = {
+            name: ref.dtype for name, ref in site.bindings.items()}
+
+    # -- events --------------------------------------------------------------
+    def _emit(self, ref: RefInfo, node: ast.AST, kind: str,
+              guard: Optional[str], aug: bool = False,
+              value: Optional[AbstractValue] = None):
+        self._order += 1
+        self.summary.events.append(AccessEvent(
+            ref=ref, node=node, kind=kind, guard=guard, aug=aug,
+            value=value, order=self._order))
+
+    def _ref_of(self, node: ast.expr) -> Optional[RefInfo]:
+        if isinstance(node, ast.Name):
+            return self.site.bindings.get(node.id)
+        return None
+
+    def _ref_value(self, ref: RefInfo, shape: Shape) -> AbstractValue:
+        dtype = ref.dtype if ref.dtype is not None else \
+            (f"dtype_of:{ref.name}" if ref.name else None)
+        return AbstractValue(shape=shape, dtype=dtype)
+
+    # -- indexing ------------------------------------------------------------
+    def _index_elts(self, slc: ast.expr) -> List[ast.expr]:
+        if isinstance(slc, ast.Tuple):
+            return list(slc.elts)
+        return [slc]
+
+    def _apply_index(self, ref: RefInfo, node: ast.AST,
+                     elts: List[ast.expr]) -> Shape:
+        """Resulting abstract shape of indexing ``ref`` with ``elts``;
+        records RL008 bounds issues for statically-decidable elements."""
+        block = ref.block_shape
+        if block is None:
+            return None
+        # align elements to dims, honouring a single Ellipsis
+        ell = next((i for i, e in enumerate(elts)
+                    if isinstance(e, ast.Constant) and e.value is Ellipsis),
+                   None)
+        if any(isinstance(e, ast.Constant) and e.value is None for e in elts):
+            return None                    # newaxis: bail on alignment
+        if ell is not None:
+            pre, post = elts[:ell], elts[ell + 1:]
+        else:
+            pre, post = elts, []
+        if len(pre) + len(post) > len(block):
+            return None
+        pairs = [(e, i) for i, e in enumerate(pre)]
+        pairs += [(e, len(block) - len(post) + i)
+                  for i, e in enumerate(post)]
+        kept: Dict[int, Optional[int]] = {i: d for i, d in enumerate(block)}
+        precise = True
+        for e, dim_idx in pairs:
+            dim = block[dim_idx]
+            res = self._index_one(ref, node, e, dim, dim_idx)
+            if res == "drop":
+                kept.pop(dim_idx, None)
+            elif isinstance(res, tuple):
+                kept[dim_idx] = res[0]
+            else:
+                precise = False
+        if not precise:
+            return None
+        return tuple(kept[i] for i in sorted(kept))
+
+    def _index_one(self, ref: RefInfo, node: ast.AST, e: ast.expr,
+                   dim: Optional[int], dim_idx: int):
+        """One index element against one block dim.  Returns ``"drop"``
+        (integer index), ``(length,)`` (slice keeps the dim), or None
+        (unknown)."""
+        c = _signed_const(e)
+        if c is not None:
+            if dim is not None and (c >= dim or c < -dim):
+                self.summary.bounds.append(BoundsIssue(
+                    ref, node,
+                    f"index {c} out of bounds for dim {dim_idx} of "
+                    f"{ref.role} ref '{ref.name}' with block shape "
+                    f"{ref.block_shape}"))
+            return "drop"
+        if isinstance(e, ast.Slice):
+            lo = _signed_const(e.lower) if e.lower is not None else 0
+            hi = _signed_const(e.upper) if e.upper is not None else dim
+            for bound, what in ((lo, "start"), (hi, "stop")):
+                if bound is not None and dim is not None and bound > dim:
+                    self.summary.bounds.append(BoundsIssue(
+                        ref, node,
+                        f"slice {what} {bound} exceeds dim {dim_idx} "
+                        f"(size {dim}) of {ref.role} ref '{ref.name}'"))
+            if lo is not None and hi is not None and e.step is None:
+                return (max(0, hi - lo),)
+            return (None,)
+        if isinstance(e, ast.Call) and self.ctx.dotted(e.func) in _DS:
+            start = _signed_const(e.args[0]) if e.args else None
+            size = _signed_const(e.args[1]) if len(e.args) > 1 else None
+            if start is not None and size is not None and dim is not None \
+                    and start + size > dim:
+                self.summary.bounds.append(BoundsIssue(
+                    ref, node,
+                    f"pl.ds({start}, {size}) exceeds dim {dim_idx} "
+                    f"(size {dim}) of {ref.role} ref '{ref.name}'"))
+            return (size,) if size is not None else (None,)
+        val = self.eval(e)
+        if val.rank == 0:
+            return "drop"
+        return None
+
+    # -- expressions ---------------------------------------------------------
+    def eval(self, node: ast.expr,
+             guard: Optional[str] = None) -> AbstractValue:
+        if isinstance(node, ast.Name):
+            ref = self.site.bindings.get(node.id)
+            if ref is not None:
+                return self._ref_value(ref, ref.block_shape)
+            return self.env.get(node.id, AbstractValue.unknown())
+        if isinstance(node, ast.Constant):
+            v = node.value
+            if isinstance(v, bool):
+                return AbstractValue.scalar("bool", weak=True)
+            if isinstance(v, int):
+                return AbstractValue.scalar("int32", weak=True)
+            if isinstance(v, float):
+                return AbstractValue.scalar("float32", weak=True)
+            return AbstractValue.unknown()
+        if isinstance(node, ast.Subscript):
+            ref = self._ref_of(node.value)
+            elts = self._index_elts(node.slice)
+            if ref is not None:
+                shape = self._apply_index(ref, node, elts)
+                self._emit(ref, node, "load", guard)
+                return self._ref_value(ref, shape)
+            base = self.eval(node.value, guard)
+            return AbstractValue(shape=None, dtype=base.dtype,
+                                 narrowed=base.narrowed)
+        if isinstance(node, ast.UnaryOp):
+            inner = self.eval(node.operand, guard)
+            if isinstance(node.op, ast.Not):
+                return AbstractValue(inner.shape, "bool")
+            return inner
+        if isinstance(node, ast.BinOp):
+            left = self.eval(node.left, guard)
+            right = self.eval(node.right, guard)
+            if isinstance(node.op, ast.MatMult):
+                out = promote(left, right)
+                return AbstractValue(None, out.dtype, narrowed=out.narrowed)
+            out = promote(left, right)
+            if isinstance(node.op, ast.Div) and out.dtype is not None and \
+                    float_rank(out.dtype) is None and \
+                    not out.dtype.startswith("dtype_of:"):
+                out = out.with_dtype("float32")
+            return out
+        if isinstance(node, ast.Compare):
+            for sub in [node.left] + node.comparators:
+                self.eval(sub, guard)
+            return AbstractValue(None, "bool")
+        if isinstance(node, ast.IfExp):
+            self.eval(node.test, guard)
+            return promote(self.eval(node.body, guard),
+                           self.eval(node.orelse, guard))
+        if isinstance(node, ast.Call):
+            return self._eval_call(node, guard)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            for e in node.elts:
+                self.eval(e, guard)
+            return AbstractValue.unknown()
+        return AbstractValue.unknown()
+
+    def _eval_call(self, node: ast.Call,
+                   guard: Optional[str]) -> AbstractValue:
+        dotted = self.ctx.dotted(node.func) or ""
+        tail = dotted.rsplit(".", 1)[-1]
+
+        # -- pallas primitives
+        if dotted == f"{_PL}.program_id":
+            return AbstractValue.scalar("int32")
+        if dotted == f"{_PL}.num_programs":
+            return AbstractValue.scalar("int32")
+        if dotted == f"{_PL}.load" and node.args:
+            ref = self._ref_of(node.args[0])
+            if ref is not None:
+                elts = self._index_elts(node.args[1]) \
+                    if len(node.args) > 1 else []
+                shape = self._apply_index(ref, node, elts) if elts \
+                    else ref.block_shape
+                self._emit(ref, node, "load", guard)
+                return self._ref_value(ref, shape)
+            return AbstractValue.unknown()
+        if dotted == f"{_PL}.store" and len(node.args) >= 3:
+            ref = self._ref_of(node.args[0])
+            value = self.eval(node.args[2], guard)
+            if ref is not None:
+                self._apply_index(ref, node, self._index_elts(node.args[1]))
+                self._emit(ref, node, "store", guard, value=value)
+            return AbstractValue.unknown()
+
+        # -- astype
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "astype":
+            base = self.eval(node.func.value, guard)
+            target = dtype_from_expr(self.ctx, node.args[0], self.ref_dtypes) \
+                if node.args else None
+            narrowed = base.narrowed
+            old_r, new_r = float_rank(base.dtype), float_rank(target)
+            if old_r is not None and new_r is not None and new_r < old_r:
+                narrowed = target if narrowed is None else \
+                    min(narrowed, target, key=lambda d: float_rank(d) or 0)
+            if target is None:
+                return AbstractValue(base.shape, None, narrowed=narrowed)
+            return AbstractValue(base.shape, target, narrowed=narrowed)
+
+        # -- dots (dtype via preferred_element_type)
+        if dotted in _DOTS:
+            pet = next((kw.value for kw in node.keywords
+                        if kw.arg == "preferred_element_type"), None)
+            operands = [self.eval(a, guard) for a in node.args
+                        if not isinstance(a, ast.Constant)]
+            dtype = dtype_from_expr(self.ctx, pet, self.ref_dtypes) \
+                if pet is not None else None
+            if dtype is None and len(operands) >= 2:
+                dtype = promote(operands[0], operands[1]).dtype
+            return AbstractValue(None, dtype)
+
+        # -- constructors
+        if tail in ("zeros", "ones", "full", "empty") and \
+                dotted.startswith("jax.numpy"):
+            shape = _const_shape_expr(node.args[0]) if node.args else None
+            dt = next((kw.value for kw in node.keywords if kw.arg == "dtype"),
+                      node.args[2] if tail == "full" and len(node.args) > 2
+                      else None)
+            dtype = dtype_from_expr(self.ctx, dt, self.ref_dtypes) \
+                if dt is not None else "float32"
+            return AbstractValue(shape, dtype)
+        if tail in ("zeros_like", "ones_like", "full_like") and node.args:
+            base = self.eval(node.args[0], guard)
+            dt = next((kw.value for kw in node.keywords
+                       if kw.arg == "dtype"), None)
+            dtype = dtype_from_expr(self.ctx, dt, self.ref_dtypes) \
+                if dt is not None else base.dtype
+            return AbstractValue(base.shape, dtype)
+        if dotted == "jax.lax.broadcasted_iota" and len(node.args) >= 2:
+            dtype = dtype_from_expr(self.ctx, node.args[0], self.ref_dtypes)
+            return AbstractValue(_const_shape_expr(node.args[1]), dtype)
+
+        # -- jnp / lax / nn families
+        head = dotted.rsplit(".", 1)[0] if "." in dotted else ""
+        if head in ("jax.numpy", "jax.lax", "jax.nn", "jax.scipy.special"):
+            if tail in _REDUCTIONS:
+                return self._eval_reduction(node, guard, method=False)
+            if tail in _BINARY and len(node.args) >= 2:
+                out = promote(self.eval(node.args[0], guard),
+                              self.eval(node.args[1], guard))
+                if tail == "divide" and float_rank(out.dtype) is None \
+                        and out.dtype and \
+                        not out.dtype.startswith("dtype_of:"):
+                    out = out.with_dtype("float32")
+                return out
+            if tail == "where" and len(node.args) == 3:
+                self.eval(node.args[0], guard)
+                return promote(self.eval(node.args[1], guard),
+                               self.eval(node.args[2], guard))
+            if tail in _UNARY_FLOAT and node.args:
+                base = self.eval(node.args[0], guard)
+                if base.dtype is None or \
+                        base.dtype.startswith("dtype_of:") or \
+                        float_rank(base.dtype) is not None:
+                    return base
+                return base.with_dtype("float32")
+            if tail in _UNARY_KEEP and node.args:
+                return self.eval(node.args[0], guard)
+        # -- method-style reductions / reshape
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr in _REDUCTIONS:
+                return self._eval_reduction(node, guard, method=True)
+            if node.func.attr == "reshape":
+                base = self.eval(node.func.value, guard)
+                shape = _const_shape_expr(
+                    node.args[0] if len(node.args) == 1 else
+                    ast.Tuple(elts=list(node.args), ctx=ast.Load())) \
+                    if node.args else None
+                return AbstractValue(shape, base.dtype,
+                                     narrowed=base.narrowed)
+
+        # unknown call: evaluate args for their load events, result unknown
+        for a in node.args:
+            self.eval(a, guard)
+        for kw in node.keywords:
+            self.eval(kw.value, guard)
+        return AbstractValue.unknown()
+
+    def _eval_reduction(self, node: ast.Call, guard: Optional[str],
+                        method: bool) -> AbstractValue:
+        if method:
+            base = self.eval(node.func.value, guard)
+            pos_axis = node.args[0] if node.args else None
+        else:
+            base = self.eval(node.args[0], guard) if node.args \
+                else AbstractValue.unknown()
+            pos_axis = node.args[1] if len(node.args) > 1 else None
+        axis = next((kw.value for kw in node.keywords if kw.arg == "axis"),
+                    pos_axis)
+        keep = next((kw.value for kw in node.keywords
+                     if kw.arg == "keepdims"), None)
+        keepdims = isinstance(keep, ast.Constant) and keep.value is True
+        shape = _reduce_shape(base.shape, axis, keepdims)
+        return AbstractValue(shape, base.dtype, narrowed=base.narrowed)
+
+    # -- statements ----------------------------------------------------------
+    def exec_block(self, stmts: List[ast.stmt], guard: Optional[str]):
+        for stmt in stmts:
+            self.exec_stmt(stmt, guard)
+
+    def exec_stmt(self, stmt: ast.stmt, guard: Optional[str]):
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            target = stmt.targets[0]
+            value = self.eval(stmt.value, guard)
+            if isinstance(target, ast.Name):
+                self.env[target.id] = value
+                if _mentions_program_id(self.ctx, stmt.value):
+                    self.pid_names.add(target.id)
+                return
+            if isinstance(target, ast.Subscript):
+                ref = self._ref_of(target.value)
+                if ref is not None:
+                    self._apply_index(ref, target,
+                                      self._index_elts(target.slice))
+                    self._emit(ref, target, "store", guard, value=value)
+                return
+            return
+        if isinstance(stmt, ast.AugAssign):
+            rhs = self.eval(stmt.value, guard)
+            if isinstance(stmt.target, ast.Subscript):
+                ref = self._ref_of(stmt.target.value)
+                if ref is not None:
+                    shape = self._apply_index(
+                        ref, stmt.target, self._index_elts(stmt.target.slice))
+                    self._emit(ref, stmt.target, "load", guard, aug=True)
+                    stored = promote(self._ref_value(ref, shape), rhs)
+                    self._emit(ref, stmt.target, "store", guard, aug=True,
+                               value=stored)
+                return
+            if isinstance(stmt.target, ast.Name):
+                prev = self.env.get(stmt.target.id, AbstractValue.unknown())
+                self.env[stmt.target.id] = promote(prev, rhs)
+            return
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            if isinstance(stmt.target, ast.Name):
+                self.env[stmt.target.id] = self.eval(stmt.value, guard)
+            return
+        if isinstance(stmt, ast.Expr):
+            # ``pl.when(cond)(lambda: ...)`` call form
+            call = stmt.value
+            if isinstance(call, ast.Call) and \
+                    isinstance(call.func, ast.Call) and \
+                    self.ctx.dotted(call.func.func) == f"{_PL}.when":
+                inner_guard = self._classify_when(call.func)
+                if call.args and isinstance(call.args[0], ast.Lambda):
+                    self.eval(call.args[0].body, inner_guard)
+                return
+            self.eval(call, guard)
+            return
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            when = self._when_decorator(stmt)
+            if when is not None:
+                # @pl.when(...) runs the body at definition point
+                self.exec_block(stmt.body, self._classify_when(when))
+            return
+        if isinstance(stmt, ast.If):
+            self.eval(stmt.test, guard)
+            self.exec_block(stmt.body, guard)
+            self.exec_block(stmt.orelse, guard)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.eval(stmt.iter, guard)
+            if isinstance(stmt.target, ast.Name):
+                self.env[stmt.target.id] = AbstractValue.scalar("int32")
+            self.exec_block(stmt.body, guard)
+            return
+        if isinstance(stmt, ast.While):
+            self.eval(stmt.test, guard)
+            self.exec_block(stmt.body, guard)
+            return
+        if isinstance(stmt, ast.Return) and stmt.value is not None:
+            self.eval(stmt.value, guard)
+            return
+        if isinstance(stmt, ast.With):
+            self.exec_block(stmt.body, guard)
+            return
+
+    # -- pl.when --------------------------------------------------------------
+    def _when_decorator(self, fn: ast.AST) -> Optional[ast.Call]:
+        for dec in getattr(fn, "decorator_list", []):
+            if isinstance(dec, ast.Call) and \
+                    self.ctx.dotted(dec.func) == f"{_PL}.when":
+                return dec
+        return None
+
+    def _classify_when(self, when: ast.Call) -> str:
+        """``when_eq0`` iff the condition is ``<program-id expr> == 0``."""
+        if not when.args:
+            return "when_other"
+        cond = when.args[0]
+        if isinstance(cond, ast.Compare) and len(cond.ops) == 1 and \
+                isinstance(cond.ops[0], ast.Eq):
+            sides = [cond.left, cond.comparators[0]]
+            consts = [const_int(s) for s in sides]
+            for i, c in enumerate(consts):
+                if c == 0:
+                    other = sides[1 - i]
+                    if self._is_program_id(other):
+                        return "when_eq0"
+        return "when_other"
+
+    def _is_program_id(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name) and node.id in self.pid_names:
+            return True
+        return _mentions_program_id(self.ctx, node)
+
+
+def _mentions_program_id(ctx: ModuleContext, node: ast.expr) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and \
+                ctx.dotted(sub.func) == f"{_PL}.program_id":
+            return True
+    return False
+
+
+def _signed_const(node: Optional[ast.expr]) -> Optional[int]:
+    if node is None:
+        return None
+    c = const_int(node)
+    if c is not None:
+        return c
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        inner = const_int(node.operand)
+        return -inner if inner is not None else None
+    return None
+
+
+def _const_shape_expr(node: Optional[ast.expr]) -> Shape:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(const_int(e) for e in node.elts)
+    if node is not None and const_int(node) is not None:
+        return (const_int(node),)
+    return None
+
+
+def _reduce_shape(shape: Shape, axis: Optional[ast.expr],
+                  keepdims: bool) -> Shape:
+    if shape is None:
+        return None
+    if axis is None:
+        return (1,) * len(shape) if keepdims else ()
+    axes: List[int] = []
+    if isinstance(axis, (ast.Tuple, ast.List)):
+        for e in axis.elts:
+            c = _signed_const(e)
+            if c is None:
+                return None
+            axes.append(c)
+    else:
+        c = _signed_const(axis)
+        if c is None:
+            return None
+        axes.append(c)
+    rank = len(shape)
+    norm = {a % rank for a in axes if -rank <= a < rank}
+    if keepdims:
+        return tuple(1 if i in norm else d for i, d in enumerate(shape))
+    return tuple(d for i, d in enumerate(shape) if i not in norm)
+
+
+def interpret_site(ctx: ModuleContext,
+                   site: KernelSite) -> Optional[KernelSummary]:
+    """Run the abstract interpreter over the site's resolved kernel.
+    None when the kernel could not be resolved or bound."""
+    if site.kernel is None or not hasattr(site.kernel, "body"):
+        return None
+    interp = _Interp(ctx, site)
+    interp.exec_block(site.kernel.body, guard=None)
+    return interp.summary
+
+
+def summaries(ctx: ModuleContext) -> List[KernelSummary]:
+    """Interpreted summaries for every resolvable site in the module
+    (cached on the context alongside the sites)."""
+    cached = getattr(ctx, "_kernel_summaries", None)
+    if cached is not None:
+        return cached
+    from repro.analysis.semantic.pallas import kernel_sites
+    out = [s for s in (interpret_site(ctx, site)
+                       for site in kernel_sites(ctx)) if s is not None]
+    ctx._kernel_summaries = out
+    return out

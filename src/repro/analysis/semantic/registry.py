@@ -1,0 +1,222 @@
+"""Live-registry consistency inventory for RL010.
+
+Unlike RL001-RL009 this is not an AST check: the sharding rule table,
+the model registry, and the plan serializer are *runtime* artifacts, and
+the only way to know whether ``_DEFAULT_RULES`` names a logical axis no
+config produces is to build every registered model and ask.  The split
+here keeps that testable:
+
+  * :func:`gather_live_inventory` does the expensive, import-heavy part
+    once per process — build every registered config abstractly, collect
+    the logical axes its params/activations/caches/inputs carry, scan
+    ``constrain(x, "batch", ...)`` literals in the source tree, snapshot
+    the rule table and the canonical plans' mesh axes, and JSON
+    round-trip each canonical plan;
+  * :func:`check_consistency` is a pure function over that
+    :class:`PlanInventory` — tests feed it synthetic inventories with
+    planted inconsistencies.
+
+Everything jax-flavoured imports lazily inside the gather: the CI lint
+job runs on a stdlib-only interpreter, where RL010 soft-skips.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+RuleTable = Dict[str, Tuple[Tuple[str, ...], ...]]
+
+
+@dataclass
+class RoundTrip:
+    """One canonical plan pushed through ``to_json``/``from_json``."""
+    name: str
+    sent: Dict[str, object]
+    received: Dict[str, object]
+
+
+@dataclass
+class PlanInventory:
+    rules: RuleTable = field(default_factory=dict)
+    produced_axes: Set[str] = field(default_factory=set)
+    mesh_axes: Set[str] = field(default_factory=set)
+    pipeline_axes: Set[str] = field(default_factory=set)
+    roundtrips: List[RoundTrip] = field(default_factory=list)
+    configs_checked: int = 0
+    errors: List[str] = field(default_factory=list)
+
+
+@dataclass(frozen=True)
+class Issue:
+    kind: str
+    subject: str                 # the axis / plan the issue is about
+    message: str
+
+
+# ---------------------------------------------------------------------------
+def _collect_axis_names(tree, out: Set[str]):
+    """Logical-axis names from a pytree of LogicalAxes/tuples/dicts."""
+    if isinstance(tree, str):
+        out.add(tree)
+    elif isinstance(tree, dict):
+        for v in tree.values():
+            _collect_axis_names(v, out)
+    elif isinstance(tree, (list, tuple)):
+        for e in tree:
+            _collect_axis_names(e, out)
+    elif hasattr(tree, "__dict__"):
+        for v in vars(tree).values():
+            _collect_axis_names(v, out)
+
+
+def _constrain_literals(src_root: pathlib.Path) -> Set[str]:
+    """String literals passed to ``constrain(x, "batch", ...)`` calls —
+    activation axes exist only as these annotations."""
+    out: Set[str] = set()
+    for path in sorted(src_root.rglob("*.py")):
+        try:
+            tree = ast.parse(path.read_text(encoding="utf-8"))
+        except (OSError, SyntaxError):
+            continue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            name = fn.id if isinstance(fn, ast.Name) else \
+                (fn.attr if isinstance(fn, ast.Attribute) else None)
+            if name != "constrain":
+                continue
+            for a in node.args[1:]:
+                if isinstance(a, ast.Constant) and isinstance(a.value, str):
+                    out.add(a.value)
+    return out
+
+
+def _plan_summary(plan) -> Dict[str, object]:
+    return {
+        "axis_names": tuple(plan.axis_names),
+        "mesh_shape": tuple(plan.mesh_shape),
+        "rule_axes": frozenset(plan.rules),
+        "rules": {k: tuple(tuple(c) for c in v)
+                  for k, v in plan.rules.items()},
+        "pipeline_axis": plan.pipeline.axis if plan.pipeline else None,
+        "collectives": (plan.collectives.intra_axis,
+                        plan.collectives.inter_axis,
+                        plan.collectives.hierarchical,
+                        plan.collectives.compress),
+    }
+
+
+_CACHE: Dict[str, PlanInventory] = {}
+
+
+def gather_live_inventory(
+        src_root: Optional[pathlib.Path] = None) -> PlanInventory:
+    """Build the inventory from the live registries (memoized per
+    process — building every registered model costs ~0.3 s).  Raises
+    ImportError when the runtime side (jax) is unavailable; the RL010
+    rule treats that as a soft skip."""
+    key = str(src_root or "")
+    if key in _CACHE:
+        return _CACHE[key]
+
+    from repro.configs import all_configs
+    from repro.core.config import SHAPES
+    from repro.models.model import build_model, input_logical_axes
+    from repro.parallel.plan import (Layout, multi_pod_plan, ParallelPlan,
+                                     plan_from_layout, single_pod_plan)
+    from repro.parallel.sharding import _DEFAULT_RULES
+
+    inv = PlanInventory()
+    inv.rules = {k: tuple(tuple(c) for c in v)
+                 for k, v in _DEFAULT_RULES.items()}
+
+    shape = SHAPES["train_4k"]
+    for cfg in all_configs().values():
+        try:
+            model = build_model(cfg)
+            _collect_axis_names(model.logical_axes(), inv.produced_axes)
+            _collect_axis_names(input_logical_axes(cfg, shape),
+                                inv.produced_axes)
+            spec = model.cache_spec(2, 16)
+            _collect_axis_names(model.cache_logical_axes(spec),
+                                inv.produced_axes)
+            inv.configs_checked += 1
+        except Exception as e:  # noqa: BLE001 — inventory, not a crash
+            inv.errors.append(f"{cfg.name}: {type(e).__name__}: {e}")
+
+    if src_root is None:
+        src_root = pathlib.Path(__file__).resolve().parents[3]
+    inv.produced_axes |= _constrain_literals(src_root)
+
+    plans = [single_pod_plan(), multi_pod_plan(),
+             plan_from_layout(Layout(pod=2, data=2, model=2, pipe=2),
+                              name="piped")]
+    for plan in plans:
+        inv.mesh_axes.update(plan.axis_names)
+        if plan.pipeline is not None:
+            inv.pipeline_axes.add(plan.pipeline.axis)
+        recovered = ParallelPlan.from_json(plan.to_json())
+        inv.roundtrips.append(RoundTrip(
+            name=plan.name, sent=_plan_summary(plan),
+            received=_plan_summary(recovered)))
+
+    _CACHE[key] = inv
+    return inv
+
+
+# ---------------------------------------------------------------------------
+def check_consistency(inv: PlanInventory) -> List[Issue]:
+    """Pure consistency check over an inventory.  Every issue is a real
+    configuration defect: an axis nobody produces still occupies rule
+    slots silently, an unmapped axis silently replicates, a mesh axis no
+    rule maps shards nothing, a lossy round-trip corrupts saved plans."""
+    issues: List[Issue] = []
+
+    for axis in sorted(inv.rules):
+        if axis not in inv.produced_axes:
+            issues.append(Issue(
+                "unproduced-rule-axis", axis,
+                f"rule table maps logical axis '{axis}' but no registered "
+                f"config produces it (dead rule — or a renamed axis whose "
+                f"tensors now silently replicate)"))
+
+    for axis in sorted(inv.produced_axes):
+        if axis not in inv.rules:
+            issues.append(Issue(
+                "unmapped-produced-axis", axis,
+                f"logical axis '{axis}' is produced by a registered config "
+                f"but has no rule-table entry; its dims replicate silently"))
+
+    referenced = {a for cands in inv.rules.values()
+                  for cand in cands for a in cand}
+    for axis in sorted(inv.mesh_axes):
+        if axis not in referenced and axis not in inv.pipeline_axes:
+            issues.append(Issue(
+                "unmapped-mesh-axis", axis,
+                f"mesh axis '{axis}' appears in canonical plans but no "
+                f"sharding rule ever maps to it (dead parallelism degree)"))
+    for axis in sorted(referenced - inv.mesh_axes):
+        issues.append(Issue(
+            "unknown-mesh-axis", axis,
+            f"rule table references mesh axis '{axis}' that no canonical "
+            f"plan defines; those candidates can never fire"))
+
+    for rt in inv.roundtrips:
+        for field_name in ("axis_names", "mesh_shape", "rule_axes", "rules",
+                           "pipeline_axis", "collectives"):
+            if rt.sent.get(field_name) != rt.received.get(field_name):
+                issues.append(Issue(
+                    "roundtrip-drop", rt.name,
+                    f"plan '{rt.name}' JSON round-trip changed "
+                    f"{field_name}: {rt.sent.get(field_name)!r} -> "
+                    f"{rt.received.get(field_name)!r}"))
+
+    for err in inv.errors:
+        issues.append(Issue(
+            "config-build-error", err.split(":", 1)[0],
+            f"registered config failed to build during inventory: {err}"))
+
+    return issues

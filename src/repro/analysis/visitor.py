@@ -61,6 +61,21 @@ class Rule:
                        message=message, symbol=symbol or "<module>")
 
 
+class ProjectRule(Rule):
+    """A rule that checks the *project*, not a module: runs once per lint
+    invocation with the tree root instead of once per file.  Findings are
+    attributed to whatever file/line the rule decides (engine applies
+    that file's pragmas afterwards, so suppressions still work)."""
+
+    project = True
+
+    def check(self, ctx: "ModuleContext") -> Iterator[Finding]:
+        return iter(())
+
+    def check_project(self, root) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
 _REGISTRY: List[Type[Rule]] = []
 
 

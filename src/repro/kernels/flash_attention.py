@@ -123,6 +123,11 @@ def flash_attention_pallas(q, k, v, q_pos, k_pos, *, causal: bool = True,
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
+        # the output block is revisited across the kv axis (online-softmax
+        # accumulation): that dim must stay sequential
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(window, q_pos.astype(jnp.int32), k_pos.astype(jnp.int32), qt, kt, vt)
     return jnp.swapaxes(out, 1, 2)

@@ -149,6 +149,10 @@ def flash_decode_pallas(q, k, v, q_pos, k_pos, *, causal: bool = True,
             jax.ShapeDtypeStruct((B, K, splits, G), jnp.float32),
             jax.ShapeDtypeStruct((B, K, splits, G), jnp.float32),
         ],
+        # every grid dim (incl. the split axis) maps to a distinct output
+        # block — the combine happens outside the kernel, so all parallel
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(window, qp, k_pos.astype(jnp.int32), qg, kt, vt)
 
@@ -272,6 +276,10 @@ def flash_decode_paged(q, k_pool, v_pool, q_pos, kp_pool, block_tables, *,
             jax.ShapeDtypeStruct((B, K, MAXB, G), jnp.float32),
             jax.ShapeDtypeStruct((B, K, MAXB, G), jnp.float32),
         ],
+        # the page-table gather aliases INPUT blocks only; every output
+        # block is written by exactly one grid step
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(bt, window, qp, qg, k_pool, v_pool, kp_pool.astype(jnp.int32))
 

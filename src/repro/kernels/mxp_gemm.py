@@ -72,5 +72,8 @@ def mxp_gemm_pallas(a, b, *, block: int = 128, block_m: int = 128,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        # the (i, j) output tile accumulates over the k axis: sequential
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

@@ -432,7 +432,11 @@ class DecoderModel:
         names = {
             "len": (),
             "ssm_conv": ("layers", "cache_batch", None, "act_mlp"),
-            "ssm_state": ("layers", "cache_batch", "ssm_heads", None, None),
+            # state dims: (L, B, H, head_dim P, state N); "ssm_state" maps
+            # to no mesh axis (replicated) but names the dim for the rule
+            # table — RL010 keys liveness on annotations, not intentions
+            "ssm_state": ("layers", "cache_batch", "ssm_heads", None,
+                          "ssm_state"),
             "k": kvax, "v": kvax,
             "pos": ("layers", "cache_batch", "cache_seq"),
             "k_loc": kvax, "v_loc": kvax,

@@ -1,0 +1,36 @@
+"""Binding-form regression: ``functools.partial(kernel, scale=...)``
+assigned to a local variable before ``pallas_call``.  The resolver must
+chase the variable, unwrap the partial, and drop the keyword-bound
+parameter from the positional binding window."""
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS", "") in ("interpret", "1")
+
+
+def _acc_kernel(x_ref, o_ref, scale=1.0):
+    o_ref[...] += x_ref[...] * scale  # RL007: no first-step init
+
+
+def running_sum(x):
+    rows, cols = x.shape
+    assert rows % 2 == 0
+    half = rows // 2
+    body = functools.partial(_acc_kernel, scale=2.0)
+    return pl.pallas_call(
+        body,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((half, cols), lambda si: (si, 0))],
+        out_specs=pl.BlockSpec((half, cols), lambda si: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((half, cols), x.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=_interpret(),
+    )(x)

@@ -1,0 +1,43 @@
+"""RL006 true positive: split-sum whose output index_map is constant in
+the split dimension — both grid steps write block (0, 0), last one wins.
+
+Executable for the differential harness: under interpret the result is
+``x[half:]`` (last split), not the intended ``x[:half] + x[half:]``.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS", "") in ("interpret", "1")
+
+
+def _sum_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]          # overwrite: the two splits race
+
+
+def split_sum(x):
+    rows, cols = x.shape
+    assert rows % 2 == 0
+    half = rows // 2
+    return pl.pallas_call(
+        _sum_kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((half, cols), lambda si: (si, 0))],
+        out_specs=pl.BlockSpec((half, cols), lambda si: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((half, cols), x.dtype),
+        interpret=_interpret(),
+    )(x)
+
+
+def run():
+    x = jnp.arange(8 * 128, dtype=jnp.float32).reshape(8, 128)
+    return split_sum(x)
+
+
+def expected():
+    x = jnp.arange(8 * 128, dtype=jnp.float32).reshape(8, 128)
+    return x[:4] + x[4:]

@@ -1,0 +1,40 @@
+"""RL006 clean twin: every grid step owns a distinct output block (the
+index_map is injective in the split dim); the combine happens outside."""
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS", "") in ("interpret", "1")
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def split_sum(x):
+    rows, cols = x.shape
+    assert rows % 2 == 0
+    half = rows // 2
+    parts = pl.pallas_call(
+        _copy_kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((half, cols), lambda si: (si, 0))],
+        out_specs=pl.BlockSpec((half, cols), lambda si: (si, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        interpret=_interpret(),
+    )(x)
+    return parts[:half] + parts[half:]
+
+
+def run():
+    x = jnp.arange(8 * 128, dtype=jnp.float32).reshape(8, 128)
+    return split_sum(x)
+
+
+def expected():
+    x = jnp.arange(8 * 128, dtype=jnp.float32).reshape(8, 128)
+    return x[:4] + x[4:]

@@ -1,0 +1,21 @@
+"""RL006 suppressed: the racing map from rl006_bad behind a pragma."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _sum_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def split_sum(x):
+    rows, cols = x.shape
+    assert rows % 2 == 0
+    half = rows // 2
+    return pl.pallas_call(
+        _sum_kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((half, cols), lambda si: (si, 0))],
+        # repro-lint: disable=RL006  (single-split grids only in this test)
+        out_specs=pl.BlockSpec((half, cols), lambda si: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((half, cols), x.dtype),
+    )(x)

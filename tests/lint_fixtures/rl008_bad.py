@@ -1,0 +1,43 @@
+"""RL008 true positive: a static row index one past the block — Pallas
+clamps it, so the store lands on the LAST row instead of raising.
+
+Under interpret the zero-initialized output comes back with row 3
+stamped (the clamped write), diverging from the intended all-zeros.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS, COLS = 4, 128
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS", "") in ("interpret", "1")
+
+
+def _stamp_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[4] = x_ref[0]              # block has rows 0..3: clamps to row 3
+
+
+def stamp(x):
+    assert x.shape == (ROWS, COLS) and x.shape[0] % ROWS == 0
+    return pl.pallas_call(
+        _stamp_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((4, 128), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((4, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((4, 128), jnp.float32),
+        interpret=_interpret(),
+    )(x)
+
+
+def run():
+    x = jnp.arange(ROWS * COLS, dtype=jnp.float32).reshape(ROWS, COLS) + 1.0
+    return stamp(x)
+
+
+def expected():
+    return jnp.zeros((ROWS, COLS), jnp.float32)

@@ -1,0 +1,22 @@
+"""RL008 suppressed: the clamped store behind a pragma."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS, COLS = 4, 128
+
+
+def _stamp_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[4] = x_ref[0]  # repro-lint: disable=RL008
+
+
+def stamp(x):
+    assert x.shape == (ROWS, COLS) and x.shape[0] % ROWS == 0
+    return pl.pallas_call(
+        _stamp_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((4, 128), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((4, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((4, 128), jnp.float32),
+    )(x)

@@ -1,0 +1,42 @@
+"""RL009 true positive: a float32 value stored into a bfloat16 output
+Ref.  Pallas refuses the implicit cast at run time (``Invalid dtype for
+'swap'``) — but only when the kernel actually executes on that dtype
+combination, which is exactly what an f32-only test suite never does.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS, COLS = 8, 128
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS", "") in ("interpret", "1")
+
+
+def _cast_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(jnp.float32)   # o_ref is bfloat16
+
+
+def downcast(x):
+    assert x.shape == (ROWS, COLS) and x.shape[0] % ROWS == 0
+    return pl.pallas_call(
+        _cast_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.bfloat16),
+        interpret=_interpret(),
+    )(x)
+
+
+def run():
+    x = jnp.arange(ROWS * COLS, dtype=jnp.float32).reshape(ROWS, COLS)
+    return downcast(x)
+
+
+def expected():
+    x = jnp.arange(ROWS * COLS, dtype=jnp.float32).reshape(ROWS, COLS)
+    return x.astype(jnp.bfloat16)

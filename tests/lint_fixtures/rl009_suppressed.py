@@ -1,0 +1,21 @@
+"""RL009 suppressed: the mismatched store behind a pragma."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS, COLS = 8, 128
+
+
+def _cast_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(jnp.float32)  # repro-lint: disable=RL009
+
+
+def downcast(x):
+    assert x.shape == (ROWS, COLS) and x.shape[0] % ROWS == 0
+    return pl.pallas_call(
+        _cast_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.bfloat16),
+    )(x)

@@ -1,0 +1,34 @@
+"""RL010 synthetic inconsistent inventory — five planted defects, one
+per issue kind ``check_consistency`` knows: a dead rule axis, an
+unmapped produced axis, a dead mesh axis, a rule naming an unknown mesh
+axis, and a lossy plan round-trip."""
+from repro.analysis.semantic.registry import PlanInventory, RoundTrip
+
+
+def inventory() -> PlanInventory:
+    return PlanInventory(
+        rules={
+            "batch": (("data",),),
+            "heads": (("model",),),
+            "ghost": (("model",),),          # no config produces "ghost"
+            "vocab": (("modell",),),         # typo'd mesh axis
+        },
+        produced_axes={"batch", "heads", "vocab", "embed"},  # "embed"
+        mesh_axes={"data", "model", "pipe", "dead"},         # unmapped
+        pipeline_axes={"pipe"},
+        roundtrips=[RoundTrip(
+            name="lossy",
+            sent={"rule_axes": frozenset({"batch", "heads"}),
+                  "axis_names": ("data", "model")},
+            received={"rule_axes": frozenset({"batch"}),     # dropped axis
+                      "axis_names": ("data", "model")})],
+    )
+
+
+EXPECTED_ISSUE_KINDS = {
+    "unproduced-rule-axis",      # ghost
+    "unmapped-produced-axis",    # embed
+    "unmapped-mesh-axis",        # dead
+    "unknown-mesh-axis",         # modell
+    "roundtrip-drop",            # lossy rule_axes
+}

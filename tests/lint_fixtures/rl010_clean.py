@@ -1,0 +1,20 @@
+"""RL010 synthetic consistent inventory — every axis produced, mapped,
+and round-tripped intact."""
+from repro.analysis.semantic.registry import PlanInventory, RoundTrip
+
+
+def inventory() -> PlanInventory:
+    summary = {"rule_axes": frozenset({"batch", "heads"}),
+               "axis_names": ("data", "model"),
+               "mesh_shape": (2, 2)}
+    return PlanInventory(
+        rules={
+            "batch": (("data",),),
+            "heads": (("model",),),
+        },
+        produced_axes={"batch", "heads"},
+        mesh_axes={"data", "model", "pipe"},
+        pipeline_axes={"pipe"},
+        roundtrips=[RoundTrip(name="intact", sent=dict(summary),
+                              received=dict(summary))],
+    )

@@ -7,7 +7,14 @@ codes are stable (0 clean / 1 findings / 2 usage error), that the
 baseline workflow hides known findings, and that the current tree lints
 clean (the CI gate).  The ``simulation.py`` RL002 fix gets a dedicated
 regression test: per-job failure jitter is no longer a constant.
+
+The semantic rules (RL006-RL009) and the project-level plan consistency
+rule (RL010) get the same treatment, plus binding-form regression
+fixtures (module-attr imports, kernels passed through variables or
+``functools.partial``) and the ``--changed-only`` / ``--format sarif``
+CLI surface.
 """
+import importlib.util
 import json
 import os
 import pathlib
@@ -18,16 +25,32 @@ import pytest
 
 from repro.analysis import all_rules, lint_paths
 from repro.analysis.engine import suppressions_for
+from repro.analysis.semantic.registry import (check_consistency,
+                                              gather_live_inventory)
 from repro.sched.simulation import Simulation
 from repro.sched.workload import Job, JobClass
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 FIXTURES = REPO / "tests" / "lint_fixtures"
-RULE_IDS = ["RL001", "RL002", "RL003", "RL004", "RL005"]
+RULE_IDS = ["RL001", "RL002", "RL003", "RL004", "RL005",
+            "RL006", "RL007", "RL008", "RL009", "RL010"]
+# rules with a per-file bad/clean/suppressed fixture trio; RL010 is a
+# project rule and is exercised via synthetic inventories below
+FILE_RULES = RULE_IDS[:9]
 
 # rule id -> expected finding count on its bad fixture (pinned so a rule
 # silently losing a pattern fails loudly, not just "nonzero")
-BAD_COUNTS = {"RL001": 3, "RL002": 5, "RL003": 2, "RL004": 4, "RL005": 2}
+BAD_COUNTS = {"RL001": 3, "RL002": 5, "RL003": 2, "RL004": 4, "RL005": 2,
+              "RL006": 1, "RL007": 1, "RL008": 1, "RL009": 1}
+
+
+def load_fixture_module(name):
+    """Import a lint fixture as a module (the dir is not a package)."""
+    path = FIXTURES / f"{name}.py"
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 def run_cli(*args, cwd=REPO):
@@ -48,21 +71,37 @@ def test_rule_registry_complete():
 
 
 # -- fixture corpus ----------------------------------------------------------
-@pytest.mark.parametrize("rule", RULE_IDS)
+@pytest.mark.parametrize("rule", FILE_RULES)
 def test_rule_fires_on_bad_fixture(rule):
-    findings = lint_fixture(f"{rule.lower()}_bad.py")
+    findings = lint_fixture(f"{rule.lower()}_bad.py", select=[rule])
     assert findings, f"{rule} did not fire on its true-positive fixture"
     assert {f.rule for f in findings} == {rule}
     assert len(findings) == BAD_COUNTS[rule]
     assert all(f.line > 0 and f.message for f in findings)
 
 
-@pytest.mark.parametrize("rule", RULE_IDS)
+@pytest.mark.parametrize("rule", ["RL006", "RL007", "RL008", "RL009"])
+def test_semantic_bad_fixture_is_mono_rule(rule):
+    # under ALL rules the semantic fixtures report exactly their own
+    # defect — no cross-rule contamination
+    findings = lint_fixture(f"{rule.lower()}_bad.py")
+    assert [(f.rule,) for f in findings] == [(rule,)]
+
+
+def test_rl004_bad_also_trips_grid_race():
+    # the RL004 fixture's constant out index map is a genuine RL006
+    # overlap; pin the combined picture so it can't silently change
+    findings = lint_fixture("rl004_bad.py")
+    by_rule = sorted(f.rule for f in findings)
+    assert by_rule == ["RL004"] * 4 + ["RL006"]
+
+
+@pytest.mark.parametrize("rule", FILE_RULES)
 def test_rule_quiet_on_clean_fixture(rule):
     assert lint_fixture(f"{rule.lower()}_clean.py") == []
 
 
-@pytest.mark.parametrize("rule", RULE_IDS)
+@pytest.mark.parametrize("rule", FILE_RULES)
 def test_rule_suppressed_fixture(rule):
     name = f"{rule.lower()}_suppressed.py"
     assert lint_paths([FIXTURES / name]).findings == []
@@ -73,6 +112,50 @@ def test_rule_suppressed_fixture(rule):
     # load-bearing, not vacuous)
     src = (FIXTURES / name).read_text()
     assert f"repro-lint: disable={rule}" in src
+
+
+# -- binding-form regressions ------------------------------------------------
+@pytest.mark.parametrize("name,line", [
+    ("forms_modattr_import.py", 18),   # import jax.experimental.pallas as pl
+    ("forms_kernel_via_var.py", 16),   # kernel through a local variable
+    ("forms_partial_via_var.py", 19),  # functools.partial via a variable
+])
+def test_semantic_rules_resolve_binding_forms(name, line):
+    findings = lint_fixture(name)
+    assert [(f.rule, f.line) for f in findings] == [("RL007", line)], \
+        f"site resolution lost the {name} form"
+
+
+# -- RL010: plan/rule consistency --------------------------------------------
+def test_rl010_flags_every_planted_defect():
+    mod = load_fixture_module("rl010_bad")
+    issues = check_consistency(mod.inventory())
+    assert {i.kind for i in issues} == mod.EXPECTED_ISSUE_KINDS
+    # exactly one defect of each kind was planted
+    assert len(issues) == len(mod.EXPECTED_ISSUE_KINDS)
+    assert all(i.subject and i.message for i in issues)
+
+
+def test_rl010_quiet_on_consistent_inventory():
+    mod = load_fixture_module("rl010_clean")
+    assert check_consistency(mod.inventory()) == []
+
+
+def test_rl010_live_tree_is_consistent():
+    # the real registries: every rule axis produced by some registered
+    # config, every produced axis mapped, no dead mesh axes, plan JSON
+    # round-trips losslessly
+    inv = gather_live_inventory(REPO / "src")
+    assert inv.errors == []
+    assert inv.configs_checked > 0
+    assert check_consistency(inv) == []
+
+
+def test_rl010_runs_in_tree_lint():
+    result = lint_paths([FIXTURES / "rl006_clean.py"], root=REPO,
+                        select=["RL010"])
+    # project rule executed against the live tree (clean), not skipped
+    assert result.findings == []
 
 
 def test_suppression_comment_forms(tmp_path):
@@ -144,7 +227,8 @@ def test_cli_json_output():
     assert proc.returncode == 1
     data = json.loads(proc.stdout)
     assert data["files"] == 1
-    assert {f["rule"] for f in data["findings"]} == {"RL004"}
+    # RL006 rides along: the fixture's constant out map is a real race
+    assert {f["rule"] for f in data["findings"]} == {"RL004", "RL006"}
 
 
 def test_cli_list_rules():
@@ -152,6 +236,84 @@ def test_cli_list_rules():
     assert proc.returncode == 0
     for rid in RULE_IDS:
         assert rid in proc.stdout
+
+
+# -- --changed-only ----------------------------------------------------------
+def _git(cwd, *args):
+    subprocess.run(["git", *args], cwd=cwd, check=True,
+                   capture_output=True, text=True)
+
+
+@pytest.fixture
+def git_repo(tmp_path):
+    _git(tmp_path, "init", "-q")
+    _git(tmp_path, "config", "user.email", "t@example.com")
+    _git(tmp_path, "config", "user.name", "t")
+    return tmp_path
+
+
+def test_changed_only_lints_only_changed_files(git_repo):
+    # committed file has a violation, but is unchanged vs HEAD -> ignored
+    legacy = git_repo / "legacy.py"
+    legacy.write_text("import numpy as np\n"
+                      "a = np.random.uniform()\n")
+    _git(git_repo, "add", "legacy.py")
+    _git(git_repo, "commit", "-qm", "seed")
+    # clean when nothing changed (REF spelled out: a bare `.` would be
+    # parsed as the optional REF, not a path)
+    proc = run_cli("--changed-only", "HEAD", ".", cwd=git_repo)
+    assert proc.returncode == 0, proc.stderr
+    assert "clean" in proc.stdout
+    # an untracked file with a violation is picked up
+    fresh = git_repo / "fresh.py"
+    fresh.write_text("import numpy as np\n"
+                     "b = np.random.uniform()\n")
+    proc = run_cli("--changed-only", "HEAD", "--json", ".", cwd=git_repo)
+    assert proc.returncode == 1
+    data = json.loads(proc.stdout)
+    assert {pathlib.Path(f["path"]).name for f in data["findings"]} == \
+        {"fresh.py"}
+    # modifying the committed file brings it back into scope
+    legacy.write_text(legacy.read_text() + "c = np.random.uniform()\n")
+    proc = run_cli("--changed-only", "HEAD", "--json", ".", cwd=git_repo)
+    data = json.loads(proc.stdout)
+    assert {pathlib.Path(f["path"]).name for f in data["findings"]} == \
+        {"fresh.py", "legacy.py"}
+
+
+def test_changed_only_bad_ref_is_usage_error(git_repo):
+    (git_repo / "a.py").write_text("x = 1\n")
+    _git(git_repo, "add", "a.py")
+    _git(git_repo, "commit", "-qm", "seed")
+    proc = run_cli("--changed-only", "no-such-ref", ".", cwd=git_repo)
+    assert proc.returncode == 2
+    assert "--changed-only" in proc.stderr
+
+
+# -- SARIF output ------------------------------------------------------------
+def test_cli_sarif_output():
+    proc = run_cli("--format", "sarif", str(FIXTURES / "rl004_bad.py"))
+    assert proc.returncode == 1
+    doc = json.loads(proc.stdout)
+    assert doc["version"] == "2.1.0"
+    run = doc["runs"][0]
+    rule_ids = [r["id"] for r in run["tool"]["driver"]["rules"]]
+    assert rule_ids == RULE_IDS        # full rule table ships in the doc
+    results = run["results"]
+    assert results and all(r["ruleId"] in set(RULE_IDS) for r in results)
+    loc = results[0]["locations"][0]["physicalLocation"]
+    assert loc["artifactLocation"]["uri"].endswith("rl004_bad.py")
+    assert loc["region"]["startLine"] > 0
+    # ruleIndex must agree with the rules array
+    for r in results:
+        assert rule_ids[r["ruleIndex"]] == r["ruleId"]
+
+
+def test_cli_sarif_clean_has_empty_results():
+    proc = run_cli("--format", "sarif", str(FIXTURES / "rl002_clean.py"))
+    assert proc.returncode == 0
+    doc = json.loads(proc.stdout)
+    assert doc["runs"][0]["results"] == []
 
 
 # -- baseline workflow -------------------------------------------------------

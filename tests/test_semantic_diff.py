@@ -1,0 +1,130 @@
+"""Differential harness for the semantic rules (RL006-RL009).
+
+A static verifier is only trustworthy if its verdicts correspond to
+observable behavior.  Each semantic-rule fixture is an *executable*
+kernel with a ``run()`` entry point and an ``expected()`` oracle; under
+``REPRO_FORCE_PALLAS=interpret`` the fixtures run their ``pallas_call``
+in interpret mode on CPU.  This module closes the loop:
+
+* every ``*_bad.py`` fixture both lints dirty (at its pinned count) AND
+  misbehaves when executed — wrong values, NaNs from an uninitialized
+  accumulator, or an outright error;
+* every ``*_clean.py`` fixture both lints clean (under ALL rules) and
+  produces exactly the oracle's answer.
+
+So a rule can neither rot into a false positive (its clean fixture
+would start flagging) nor into a lie (its bad fixture would start
+producing correct output, proving the "defect" harmless).
+
+Observed interpret-mode failure modes, pinned per rule:
+  RL006 grid-write-race       -> last-wins overwrite, wrong values
+  RL007 uninit-accumulator    -> NaNs from the uninitialized buffer
+  RL008 ref-out-of-bounds     -> silent index clamp, wrong values
+  RL009 dtype-drift           -> ValueError from the dtype-checked swap
+"""
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.analysis import lint_paths
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "lint_fixtures"
+
+SEMANTIC_RULES = ["RL006", "RL007", "RL008", "RL009"]
+BAD_COUNTS = {"RL006": 1, "RL007": 1, "RL008": 1, "RL009": 1}
+
+
+@pytest.fixture(autouse=True)
+def _interpret_mode(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "interpret")
+
+
+def load(name):
+    """Import a fixture fresh (the dir is deliberately not a package)."""
+    path = FIXTURES / f"{name}.py"
+    spec = importlib.util.spec_from_file_location(f"semdiff_{name}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def run_fixture(mod):
+    """Execute run(); return (output, error)."""
+    try:
+        return np.asarray(mod.run()), None
+    except Exception as e:                   # dtype drift raises
+        return None, e
+
+
+def matches_oracle(got, exp):
+    if got is None or got.shape != np.asarray(exp).shape:
+        return False
+    # NaN-aware: equal_nan=False so an all-NaN accumulator never passes
+    return bool(np.allclose(got, np.asarray(exp), atol=1e-2,
+                            equal_nan=False))
+
+
+# -- bad fixtures: lint dirty AND misbehave ----------------------------------
+@pytest.mark.parametrize("rule", SEMANTIC_RULES)
+def test_bad_fixture_lints_dirty(rule):
+    findings = lint_paths([FIXTURES / f"{rule.lower()}_bad.py"],
+                          select=[rule]).findings
+    assert len(findings) == BAD_COUNTS[rule]
+    assert {f.rule for f in findings} == {rule}
+
+
+@pytest.mark.parametrize("rule", SEMANTIC_RULES)
+def test_bad_fixture_misbehaves_when_executed(rule):
+    mod = load(f"{rule.lower()}_bad")
+    got, err = run_fixture(mod)
+    if err is not None:
+        return                               # crashed: misbehavior proven
+    assert not matches_oracle(got, mod.expected()), (
+        f"{rule}'s bad fixture now computes the correct answer — the "
+        f"static finding no longer corresponds to real misbehavior")
+
+
+def test_rl007_bad_produces_nans():
+    # pin the *mode* of failure, not just "wrong": an uninitialized
+    # interpret-mode buffer reads back NaN
+    got, err = run_fixture(load("rl007_bad"))
+    assert err is None
+    assert np.isnan(got).any()
+
+
+def test_rl009_bad_raises_dtype_error():
+    got, err = run_fixture(load("rl009_bad"))
+    assert err is not None
+    assert "dtype" in str(err).lower()
+
+
+# -- clean fixtures: lint clean AND match the oracle -------------------------
+@pytest.mark.parametrize("rule", SEMANTIC_RULES)
+def test_clean_fixture_lints_clean(rule):
+    # under ALL rules, not just its own
+    findings = lint_paths([FIXTURES / f"{rule.lower()}_clean.py"]).findings
+    assert findings == []
+
+
+@pytest.mark.parametrize("rule", SEMANTIC_RULES)
+def test_clean_fixture_matches_oracle(rule):
+    mod = load(f"{rule.lower()}_clean")
+    got, err = run_fixture(mod)
+    assert err is None, f"clean fixture for {rule} raised: {err}"
+    assert matches_oracle(got, mod.expected())
+
+
+# -- binding-form fixtures also execute correctly ----------------------------
+@pytest.mark.parametrize("name", ["forms_modattr_import",
+                                  "forms_kernel_via_var",
+                                  "forms_partial_via_var"])
+def test_forms_fixtures_are_executable(name):
+    # the forms fixtures carry an RL007 bug; under interpret mode the
+    # accumulator NaNs out, proving the flagged defect is real there too
+    mod = load(name)
+    x = np.arange(8 * 128, dtype=np.float32).reshape(8, 128)
+    out = np.asarray(mod.running_sum(x))
+    assert np.isnan(out).any()
