@@ -76,7 +76,7 @@ def run_one(model, params, trace: List[TraceEntry], *, slots: int,
             prefill_chunk: Optional[int], temperature: float = 0.7,
             seed: int = 0, block_size: Optional[int] = None,
             num_blocks: Optional[int] = None, prefix_cache: bool = True,
-            extra_warm_buckets=()) -> Dict:
+            kv_dtype: str = "bf16", extra_warm_buckets=()) -> Dict:
     """Drive one engine config through the trace; return summary metrics."""
     from repro.serving import Engine, SamplingParams
 
@@ -85,7 +85,7 @@ def run_one(model, params, trace: List[TraceEntry], *, slots: int,
     engine = Engine(model, params, slots=slots, prefill_len=prefill_len,
                     cache_len=cache_len, prefill_chunk=prefill_chunk,
                     block_size=block_size, num_blocks=num_blocks,
-                    prefix_cache=prefix_cache)
+                    prefix_cache=prefix_cache, kv_dtype=kv_dtype)
     # warm up every prefill bucket this trace will hit plus the decode
     # step BEFORE starting the arrival clock — otherwise p99 TTFT and
     # queue wait just measure XLA compile time, not queueing behaviour.
@@ -157,7 +157,7 @@ def sweep(arch: str, *, requests: int, rate: float, slots_list: List[int],
           chunk_list: List[Optional[int]], prefill_len: int, cache_len: int,
           max_new: int, seed: int, block_size: Optional[int] = None,
           num_blocks: Optional[int] = None,
-          prefix_cache: bool = True) -> List[Dict]:
+          prefix_cache: bool = True, kv_dtype: str = "bf16") -> List[Dict]:
     import jax
     import jax.numpy as jnp
     from repro.configs import reduced_config
@@ -175,11 +175,13 @@ def sweep(arch: str, *, requests: int, rate: float, slots_list: List[int],
                         prefill_len=prefill_len, cache_len=cache_len,
                         prefill_chunk=chunk, seed=seed,
                         block_size=block_size, num_blocks=num_blocks,
-                        prefix_cache=prefix_cache)
+                        prefix_cache=prefix_cache, kv_dtype=kv_dtype)
             name = f"serving/slots{slots}" + (f"_chunk{chunk}" if chunk
                                               else "")
             if block_size:
                 name += f"_paged{block_size}"
+            if kv_dtype != "bf16":
+                name += f"_kv{kv_dtype}"
             us_per_tok = 1e6 * s["elapsed_s"] / max(s["output_tokens"], 1)
             emit(name, us_per_tok, _derived(s))
             s["name"] = name
@@ -193,7 +195,8 @@ def _row(s: Dict) -> Dict:
             "ttft_p50_ms", "ttft_p99_ms", "queue_wait_p50_ms",
             "queue_wait_p99_ms", "tok_per_s", "kv_allocated_mb",
             "kv_used_mb", "kv_utilization", "prefilled_tokens",
-            "prefix_cached_tokens", "free_blocks", "num_blocks")
+            "prefix_cached_tokens", "free_blocks", "num_blocks",
+            "kv_dtype")
     out = {k: s[k] for k in keys if k in s}
     if "prefix" in s:
         out["prefix"] = s["prefix"]
@@ -214,6 +217,9 @@ def run():
        with the prefix cache on, only the per-user suffix is prefilled,
        so median TTFT and total prefilled tokens must drop vs the same
        paged engine with the prefix cache off.
+    3. quant_capacity — the same burst at the same HBM byte budget on a
+       head_dim-128 config: an int8 pool holds ~1.94x the blocks, so
+       peak admitted concurrency must rise >= 1.8x vs the bf16 pool.
     """
     import jax
     import jax.numpy as jnp
@@ -285,6 +291,49 @@ def run():
         f"prefix cache did not reduce median TTFT " \
         f"({hit['ttft_p50_ms']:.1f} vs {miss['ttft_p50_ms']:.1f} ms)"
 
+    # --- experiment 3: quantized KV capacity at a fixed HBM budget -----
+    # Same burst mix, same byte budget, different cache dtype: the int8
+    # pool gets floor(budget / int8_block_bytes) blocks — ~1.94x as many
+    # at head_dim 128 (2*hd vs hd+4 bytes per cached vector) — so peak
+    # admitted concurrency must rise by >= 1.8x.  head_dim 128 keeps the
+    # byte ratio honest (the 2-layer d64 smoke config's hd=16 would cap
+    # it at 1.6x); slots are set above the block-limited ceiling on both
+    # sides so admission is gated by bytes, not the slot count.
+    cfg3 = dataclasses.replace(cfg, num_heads=2, num_kv_heads=1,
+                               head_dim=128)
+    model3 = build_model(cfg3, remat="none")
+    params3 = model3.init(jax.random.key(0), dtype=jnp.float32)
+    # 48 requests at burst rate: deep enough backlog that BOTH pools
+    # saturate at their block-limited ceiling, not at the request count
+    trace3 = make_trace(48, 2000.0, prefill_len=32, vocab=cfg3.vocab_size,
+                        max_new_cap=8, seed=0)
+    bf16_blocks = 18
+    q_bf = run_one(model3, params3, trace3, slots=30, prefill_len=32,
+                   cache_len=96, prefill_chunk=16, seed=0,
+                   block_size=16, num_blocks=bf16_blocks,
+                   kv_dtype="bf16")
+    emit("serving/quant_capacity_bf16",
+         1e6 * q_bf["elapsed_s"] / max(q_bf["output_tokens"], 1),
+         _derived(q_bf) + ";kv_dtype=bf16")
+    from repro.kernels.quant import kv_bytes_per_vector
+    bpt = {kv: cfg3.num_layers * 2 * cfg3.num_kv_heads
+           * kv_bytes_per_vector(cfg3.head_dim, kv)
+           for kv in ("bf16", "int8")}
+    budget = bf16_blocks * 16 * bpt["bf16"]
+    int8_blocks = budget // (16 * bpt["int8"])
+    q_i8 = run_one(model3, params3, trace3, slots=30, prefill_len=32,
+                   cache_len=96, prefill_chunk=16, seed=0,
+                   block_size=16, num_blocks=int(int8_blocks),
+                   kv_dtype="int8")
+    emit("serving/quant_capacity_int8",
+         1e6 * q_i8["elapsed_s"] / max(q_i8["output_tokens"], 1),
+         _derived(q_i8) + ";kv_dtype=int8")
+    quant_ratio = q_i8["peak_concurrent"] / max(q_bf["peak_concurrent"], 1)
+    assert quant_ratio >= 1.8, \
+        f"int8 peak {q_i8['peak_concurrent']} < 1.8x bf16 " \
+        f"{q_bf['peak_concurrent']} at the same {budget}-byte KV budget"
+    assert q_i8["kv_utilization"] > 0 and q_bf["kv_utilization"] > 0
+
     baseline = {
         "suite": "serving",
         "jax": jax.__version__,
@@ -305,6 +354,15 @@ def run():
             "ttft_p50_ratio": hit["ttft_p50_ms"] / miss["ttft_p50_ms"],
             "prefilled_ratio":
                 hit["prefilled_tokens"] / miss["prefilled_tokens"],
+        },
+        "quant_capacity": {
+            "head_dim": cfg3.head_dim,
+            "hbm_budget_bytes": int(budget),
+            "kv_bytes_per_token": bpt,
+            "blocks": {"bf16": bf16_blocks, "int8": int(int8_blocks)},
+            "bf16": _row(q_bf),
+            "int8": _row(q_i8),
+            "capacity_ratio": quant_ratio,
         },
     }
     OUT_PATH.parent.mkdir(parents=True, exist_ok=True)
@@ -332,6 +390,10 @@ def main(argv=None) -> int:
                     help="paged KV: pool size in blocks")
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=True, help="paged KV: shared-prefix block reuse")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=("bf16", "int8", "fp8"),
+                    help="KV cache storage dtype (int8/fp8 quantize "
+                         "on write, dequantize in-kernel)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     slots_list = [int(x) for x in args.slots.split(",") if x]
@@ -342,7 +404,7 @@ def main(argv=None) -> int:
           prefill_len=args.prefill_len, cache_len=args.cache_len,
           max_new=args.max_new, seed=args.seed,
           block_size=args.block_size, num_blocks=args.num_blocks,
-          prefix_cache=args.prefix_cache)
+          prefix_cache=args.prefix_cache, kv_dtype=args.kv_dtype)
     return 0
 
 

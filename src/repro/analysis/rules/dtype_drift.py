@@ -1,6 +1,6 @@
 """RL009 — dtype-drift.
 
-Two dtype hazards at kernel stores, both invisible syntactically:
+Three dtype hazards at kernel stores, all invisible syntactically:
 
   * **mismatched store** — the inferred dtype of a stored value differs
     from the target Ref's declared dtype (``out_shape``'s
@@ -18,6 +18,16 @@ Two dtype hazards at kernel stores, both invisible syntactically:
     (bf16 widens to f32 fine), but the bits were already quantized: the
     f32 accumulator silently holds bf16-grade partial sums.  The
     abstract domain carries this as the ``narrowed`` mark.
+
+  * **missing-scale dequant** — a value loaded from a quantized-KV Ref
+    (an in-ref whose operand dtype is int8/fp8, or the conventional
+    ``kq_ref``/``vq_ref`` names) that was widened to float but never
+    multiplied by its scale ref before reaching a store.  The sanctioned
+    dequant idiom — ``kq_ref[...].astype(jnp.float32) *
+    ks_ref[...][:, None]`` — clears the mark: the multiply against a
+    non-weak array operand IS the dequantization, so the quantized
+    kernels lint clean without suppressions.  ``q * 2.0`` does not
+    clear (a Python scalar is not a per-vector scale).
 
 Weak-typed Python scalars (``o_ref[...] = 0.0``) never flag — jax gives
 them the Ref's dtype.
@@ -74,3 +84,16 @@ class DtypeDrift(Rule):
                         f"earlier in the kernel — the wide accumulator "
                         f"holds already-quantized bits; keep the chain in "
                         f"{ref.dtype} and cast only at the final store")
+                    continue
+                # missing-scale dequant: a quantized-KV load widened to
+                # float without ever meeting its scale ref (the
+                # float_rank gate skips int8 passthrough stores, which
+                # are legitimate re-layout, not use-as-magnitude)
+                if val.unscaled and float_rank(val.dtype) is not None:
+                    yield self.finding(
+                        ctx, ev.node,
+                        f"value stored into {ref.role} ref '{ref.name}' "
+                        f"was loaded from a quantized K/V ref and widened "
+                        f"to {val.dtype} without a scale multiply — "
+                        f"dequantize as q.astype(jnp.float32) * "
+                        f"scale_ref[...] before using it as a magnitude")

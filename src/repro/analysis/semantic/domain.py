@@ -20,6 +20,14 @@ kernel in this repo uses.
 through an ``astype`` to a *lower*-precision float keeps the low dtype
 name in ``narrowed`` even after later promotions widen it back — RL009
 flags a narrowed value stored into a wider accumulator Ref.
+
+``unscaled`` records a pending dequantization: a value loaded from a
+quantized-KV Ref (int8/fp8 cache storage) carries the mark through
+``astype`` widening and is cleared only by a multiply against a
+non-weak operand — the sanctioned ``q.astype(f32) * scale_ref[...]``
+dequant idiom.  RL009 flags an unscaled value that reaches a store
+still widened-to-float: quantized integers used as if they were real
+K/V magnitudes.
 """
 from __future__ import annotations
 
@@ -45,6 +53,10 @@ _DTYPES = {
 
 _ALIASES = {"bool_": "bool", "single": "float32", "double": "float64",
             "half": "float16"}
+
+# storage dtypes of quantized KV caches: loads from in-refs of these
+# dtypes carry the ``unscaled`` mark until a scale multiply clears it
+QUANTIZED_DTYPES = frozenset({"int8", "float8_e4m3fn", "float8_e5m2"})
 
 
 def canonical_dtype(name: str) -> Optional[str]:
@@ -87,6 +99,7 @@ class AbstractValue:
     dtype: Optional[str] = None       # canonical name or "dtype_of:<ref>"
     weak: bool = False                # Python scalar (jax weak type)
     narrowed: Optional[str] = None    # lowest float dtype passed through
+    unscaled: bool = False            # quantized load awaiting its scale
 
     @classmethod
     def unknown(cls) -> "AbstractValue":
@@ -109,21 +122,25 @@ def promote(a: AbstractValue, b: AbstractValue) -> AbstractValue:
     """Abstract result of a broadcasting binary op (``a ⊕ b``)."""
     shape = broadcast_shapes(a.shape, b.shape)
     narrowed = _merge_narrowed(a, b)
+    unscaled = a.unscaled or b.unscaled
     if a.weak and b.weak:
         return AbstractValue(shape, _promote_names(a.dtype, b.dtype)
                              if a.dtype and b.dtype else None,
-                             weak=True, narrowed=narrowed)
+                             weak=True, narrowed=narrowed, unscaled=unscaled)
     if a.weak:
-        return AbstractValue(shape, b.dtype, narrowed=narrowed)
+        return AbstractValue(shape, b.dtype, narrowed=narrowed,
+                             unscaled=unscaled)
     if b.weak:
-        return AbstractValue(shape, a.dtype, narrowed=narrowed)
+        return AbstractValue(shape, a.dtype, narrowed=narrowed,
+                             unscaled=unscaled)
     if a.dtype is None or b.dtype is None or \
             a.dtype.startswith("dtype_of:") or b.dtype.startswith("dtype_of:"):
         # symbolic/unknown operand: keep it only when both sides agree
         dtype = a.dtype if a.dtype == b.dtype else None
-        return AbstractValue(shape, dtype, narrowed=narrowed)
+        return AbstractValue(shape, dtype, narrowed=narrowed,
+                             unscaled=unscaled)
     return AbstractValue(shape, _promote_names(a.dtype, b.dtype),
-                         narrowed=narrowed)
+                         narrowed=narrowed, unscaled=unscaled)
 
 
 def _merge_narrowed(a: AbstractValue, b: AbstractValue) -> Optional[str]:

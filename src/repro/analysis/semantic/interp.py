@@ -26,12 +26,13 @@ ever loses facts, never invents them.
 from __future__ import annotations
 
 import ast
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Set, Tuple
 
-from repro.analysis.semantic.domain import (AbstractValue, Shape,
-                                            broadcast_shapes, dtype_from_expr,
-                                            float_rank, promote)
+from repro.analysis.semantic.domain import (QUANTIZED_DTYPES, AbstractValue,
+                                            Shape, broadcast_shapes,
+                                            dtype_from_expr, float_rank,
+                                            promote)
 from repro.analysis.semantic.pallas import KernelSite, RefInfo
 from repro.analysis.visitor import ModuleContext, const_int
 
@@ -48,6 +49,11 @@ _REDUCTIONS = {"sum", "max", "min", "mean", "prod", "amax", "amin", "any",
                "all"}
 _DOTS = {"jax.lax.dot_general", "jax.lax.dot", "jax.numpy.dot",
          "jax.numpy.matmul", "jax.numpy.einsum", f"{_PL}.dot"}
+
+# conventional parameter names of quantized-KV refs in this repo's
+# kernels: loads from these carry ``unscaled`` even when the operand
+# dtype could not be chased (e.g. the operand is a function parameter)
+_QUANT_REF_NAMES = {"kq_ref", "vq_ref"}
 
 
 @dataclass
@@ -108,7 +114,9 @@ class _Interp:
     def _ref_value(self, ref: RefInfo, shape: Shape) -> AbstractValue:
         dtype = ref.dtype if ref.dtype is not None else \
             (f"dtype_of:{ref.name}" if ref.name else None)
-        return AbstractValue(shape=shape, dtype=dtype)
+        unscaled = ref.role == "in" and (
+            ref.dtype in QUANTIZED_DTYPES or ref.name in _QUANT_REF_NAMES)
+        return AbstractValue(shape=shape, dtype=dtype, unscaled=unscaled)
 
     # -- indexing ------------------------------------------------------------
     def _index_elts(self, slc: ast.expr) -> List[ast.expr]:
@@ -220,7 +228,8 @@ class _Interp:
                 return self._ref_value(ref, shape)
             base = self.eval(node.value, guard)
             return AbstractValue(shape=None, dtype=base.dtype,
-                                 narrowed=base.narrowed)
+                                 narrowed=base.narrowed,
+                                 unscaled=base.unscaled)
         if isinstance(node, ast.UnaryOp):
             inner = self.eval(node.operand, guard)
             if isinstance(node.op, ast.Not):
@@ -231,8 +240,11 @@ class _Interp:
             right = self.eval(node.right, guard)
             if isinstance(node.op, ast.MatMult):
                 out = promote(left, right)
-                return AbstractValue(None, out.dtype, narrowed=out.narrowed)
+                return AbstractValue(None, out.dtype, narrowed=out.narrowed,
+                                     unscaled=out.unscaled)
             out = promote(left, right)
+            if isinstance(node.op, ast.Mult):
+                out = _apply_scale(out, left, right)
             if isinstance(node.op, ast.Div) and out.dtype is not None and \
                     float_rank(out.dtype) is None and \
                     not out.dtype.startswith("dtype_of:"):
@@ -294,8 +306,10 @@ class _Interp:
                 narrowed = target if narrowed is None else \
                     min(narrowed, target, key=lambda d: float_rank(d) or 0)
             if target is None:
-                return AbstractValue(base.shape, None, narrowed=narrowed)
-            return AbstractValue(base.shape, target, narrowed=narrowed)
+                return AbstractValue(base.shape, None, narrowed=narrowed,
+                                     unscaled=base.unscaled)
+            return AbstractValue(base.shape, target, narrowed=narrowed,
+                                 unscaled=base.unscaled)
 
         # -- dots (dtype via preferred_element_type)
         if dotted in _DOTS:
@@ -307,7 +321,8 @@ class _Interp:
                 if pet is not None else None
             if dtype is None and len(operands) >= 2:
                 dtype = promote(operands[0], operands[1]).dtype
-            return AbstractValue(None, dtype)
+            return AbstractValue(None, dtype,
+                                 unscaled=any(o.unscaled for o in operands))
 
         # -- constructors
         if tail in ("zeros", "ones", "full", "empty") and \
@@ -336,8 +351,11 @@ class _Interp:
             if tail in _REDUCTIONS:
                 return self._eval_reduction(node, guard, method=False)
             if tail in _BINARY and len(node.args) >= 2:
-                out = promote(self.eval(node.args[0], guard),
-                              self.eval(node.args[1], guard))
+                left = self.eval(node.args[0], guard)
+                right = self.eval(node.args[1], guard)
+                out = promote(left, right)
+                if tail == "multiply":
+                    out = _apply_scale(out, left, right)
                 if tail == "divide" and float_rank(out.dtype) is None \
                         and out.dtype and \
                         not out.dtype.startswith("dtype_of:"):
@@ -367,7 +385,8 @@ class _Interp:
                     ast.Tuple(elts=list(node.args), ctx=ast.Load())) \
                     if node.args else None
                 return AbstractValue(shape, base.dtype,
-                                     narrowed=base.narrowed)
+                                     narrowed=base.narrowed,
+                                     unscaled=base.unscaled)
 
         # unknown call: evaluate args for their load events, result unknown
         for a in node.args:
@@ -391,7 +410,8 @@ class _Interp:
                      if kw.arg == "keepdims"), None)
         keepdims = isinstance(keep, ast.Constant) and keep.value is True
         shape = _reduce_shape(base.shape, axis, keepdims)
-        return AbstractValue(shape, base.dtype, narrowed=base.narrowed)
+        return AbstractValue(shape, base.dtype, narrowed=base.narrowed,
+                             unscaled=base.unscaled)
 
     # -- statements ----------------------------------------------------------
     def exec_block(self, stmts: List[ast.stmt], guard: Optional[str]):
@@ -503,6 +523,19 @@ class _Interp:
         if isinstance(node, ast.Name) and node.id in self.pid_names:
             return True
         return _mentions_program_id(self.ctx, node)
+
+
+def _apply_scale(out: AbstractValue, left: AbstractValue,
+                 right: AbstractValue) -> AbstractValue:
+    """A multiply of an unscaled (quantized-load) value by a non-weak
+    array operand IS the dequantization — clear the mark.  A weak Python
+    scalar does not count: ``q * 2.0`` is not a per-vector scale."""
+    if not out.unscaled or left.unscaled == right.unscaled:
+        return out
+    other = right if left.unscaled else left
+    if other.weak:
+        return out
+    return replace(out, unscaled=False)
 
 
 def _mentions_program_id(ctx: ModuleContext, node: ast.expr) -> bool:

@@ -290,11 +290,40 @@ def extract_site(ctx: ModuleContext, call: ast.Call) -> KernelSite:
     for i, expr in enumerate(scratch or []):
         site.scratch.append(_scratch_info(ctx, expr, i))
 
+    _infer_operand_dtypes(ctx, call, scope, site)
+
     if call.args:
         kernel, shift, bound_kw = _resolve_kernel(ctx, call.args[0], scope)
         if kernel is not None and _bind_params(site, kernel, shift, bound_kw):
             site.kernel = kernel
     return site
+
+
+def _infer_operand_dtypes(ctx: ModuleContext, call: ast.Call, scope: ast.AST,
+                          site: KernelSite):
+    """Fill unknown in-ref dtypes from the application's operands.
+
+    ``BlockSpec`` declares no dtype, but the call that APPLIES the
+    ``pallas_call`` result does pass concrete operands — and when an
+    operand (chased through local single assignments) is the
+    ``x.astype(<dtype>)`` form, that dtype is the in-ref's.  This is how
+    quantized-cache refs (int8/fp8 operands) become recognizable to
+    RL009 without per-kernel registration."""
+    apply = next((n for n in ast.walk(scope)
+                  if isinstance(n, ast.Call) and n.func is call), None)
+    if apply is None:
+        return
+    pre = site.num_scalar_prefetch
+    for i, info in enumerate(site.ins):
+        if info.dtype is not None:
+            continue
+        ai = pre + i
+        if ai >= len(apply.args):
+            continue
+        op = _chase(ctx, apply.args[ai], scope)
+        if isinstance(op, ast.Call) and isinstance(op.func, ast.Attribute) \
+                and op.func.attr == "astype" and op.args:
+            info.dtype = dtype_from_expr(ctx, op.args[0])
 
 
 def kernel_sites(ctx: ModuleContext) -> List[KernelSite]:

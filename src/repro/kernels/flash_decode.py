@@ -287,6 +287,250 @@ def flash_decode_paged(q, k_pool, v_pool, q_pos, kp_pool, block_tables, *,
     return out.reshape(B, 1, H, d).astype(q.dtype)
 
 
+def _decode_kernel_quant(win_ref, qpos_ref, kpos_ref, q_ref, kq_ref,
+                         vq_ref, ks_ref, vs_ref, o_ref, m_ref, l_ref, *,
+                         scale: float, causal: bool,
+                         softcap: Optional[float]):
+    """Quantized-cache twin of ``_decode_kernel``.
+
+    K/V blocks arrive int8/fp8 with one f32 scale per (token, head)
+    vector; the dequant is the first thing the kernel does (the
+    sanctioned widen-and-scale idiom RL009 recognizes), so HBM streams
+    quantized bytes while every contraction below runs f32 — the
+    split-KV partials and the LSE epilogue are untouched.
+    """
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, d)
+    k = kq_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]
+    v = vq_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]
+    qp = qpos_ref[0, 0]                    # scalar: this row's position
+    kp = kpos_ref[0]                       # (bk,)
+    window = win_ref[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # (G, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    valid = kp >= 0
+    if causal:
+        valid &= qp >= kp
+    valid &= (qp - kp) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m = s.max(axis=-1)                                     # (G,)
+    p = jnp.where(valid[None, :], jnp.exp(s - m[:, None]), 0.0)
+    l = p.sum(axis=-1)                                     # (G,)
+    acc = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (G, d)
+
+    o_ref[0, 0, 0] = acc
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+def flash_decode_pallas_quant(q, kq, vq, q_pos, k_pos, k_scale, v_scale,
+                              *, causal: bool = True, window=None,
+                              softcap: Optional[float] = None,
+                              block_k: int = 512,
+                              interpret: bool = False):
+    """Grouped split-KV flash decode over a quantized contiguous cache.
+
+    Same contract as ``flash_decode_pallas`` except ``kq, vq (B, T, K,
+    d)`` are int8/fp8 and ``k_scale, v_scale (B, T, K)`` carry the f32
+    per-(token, head) scales.  Scales ride the grid exactly like
+    ``k_pos``: transposed to (B, K, T) and blocked (1, 1, bk) on the
+    same (b, h, si) map as their data blocks.
+    """
+    B, S, H, d = q.shape
+    T, K = kq.shape[1], kq.shape[2]
+    if S != 1:
+        raise NotImplementedError("flash decode handles a single query "
+                                  f"token per row (got S={S})")
+    if H % K:
+        raise NotImplementedError(f"q heads {H} not grouped over kv {K}")
+    G = H // K
+    bk = min(block_k, T)
+    if T % bk:
+        pad = bk - T % bk
+        kq = jnp.pad(kq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vq = jnp.pad(vq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        T += pad
+    splits = T // bk
+    if window is None:
+        window = 1 << 30
+    window = jnp.asarray(window, jnp.int32).reshape(1)
+    qp = jnp.broadcast_to(q_pos.astype(jnp.int32).reshape(B, -1)[:, :1],
+                          (B, 1))
+
+    qg = q[:, 0].reshape(B, K, G, d)
+    kt = jnp.swapaxes(kq, 1, 2)                            # (B, K, T, d)
+    vt = jnp.swapaxes(vq, 1, 2)
+    kst = jnp.swapaxes(k_scale, 1, 2).astype(jnp.float32)  # (B, K, T)
+    vst = jnp.swapaxes(v_scale, 1, 2).astype(jnp.float32)
+    grid = (B, K, splits)
+
+    o_part, m_part, l_part = pl.pallas_call(
+        functools.partial(_decode_kernel_quant, scale=1.0 / math.sqrt(d),
+                          causal=causal, softcap=softcap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, si: (0,)),            # window
+            pl.BlockSpec((1, 1), lambda b, h, si: (b, 0)),        # q_pos
+            pl.BlockSpec((1, bk), lambda b, h, si: (b, si)),      # k_pos
+            pl.BlockSpec((1, 1, G, d), lambda b, h, si: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, si: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b, h, si: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, bk), lambda b, h, si: (b, h, si)),  # ks
+            pl.BlockSpec((1, 1, bk), lambda b, h, si: (b, h, si)),  # vs
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G, d),
+                         lambda b, h, si: (b, h, si, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, si: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, si: (b, h, si, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, splits, G, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, splits, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, splits, G), jnp.float32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(window, qp, k_pos.astype(jnp.int32), qg, kt, vt, kst, vst)
+
+    out = combine_partials(o_part, m_part, l_part)         # (B, K, G, d)
+    return out.reshape(B, 1, H, d).astype(q.dtype)
+
+
+def _paged_decode_kernel_quant(bt_ref, win_ref, qpos_ref, q_ref, kq_ref,
+                               vq_ref, ks_ref, vs_ref, kpos_ref, o_ref,
+                               m_ref, l_ref, *, scale: float, causal: bool,
+                               softcap: Optional[float]):
+    """Quantized-cache twin of ``_paged_decode_kernel``.
+
+    The scale blocks are gathered from their own (NB, BS, K) pools via
+    the SAME block-table index map as the K/V data blocks, so a pool
+    block and its scales always travel together.
+    """
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+    blk = bt_ref[b, si]                    # pool block id, -1 = unmapped
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, d)
+    k = kq_ref[0, :, 0].astype(jnp.float32) * ks_ref[0, :, 0][:, None]
+    v = vq_ref[0, :, 0].astype(jnp.float32) * vs_ref[0, :, 0][:, None]
+    qp = qpos_ref[0, 0]                    # scalar: this row's position
+    kp = kpos_ref[0]                       # (bs,)
+    window = win_ref[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # (G, bs)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    valid = (kp >= 0) & (blk >= 0)
+    if causal:
+        valid &= qp >= kp
+    valid &= (qp - kp) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m = s.max(axis=-1)                                     # (G,)
+    p = jnp.where(valid[None, :], jnp.exp(s - m[:, None]), 0.0)
+    l = p.sum(axis=-1)                                     # (G,)
+    acc = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (G, d)
+
+    o_ref[0, 0, 0] = acc
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+
+
+def flash_decode_paged_quant(q, kq_pool, vq_pool, q_pos, kp_pool,
+                             block_tables, ks_pool, vs_pool, *,
+                             causal: bool = True, window=None,
+                             softcap: Optional[float] = None,
+                             interpret: bool = False):
+    """Paged flash decode over a quantized block pool.
+
+    Same contract as ``flash_decode_paged`` except ``kq_pool, vq_pool
+    (NB, BS, K, d)`` are int8/fp8 and ``ks_pool, vs_pool (NB, BS, K)``
+    are the f32 scale pools, block-mapped alongside the data through the
+    same scalar-prefetched table.
+    """
+    B, S, H, d = q.shape
+    NB, BS, K, dk = kq_pool.shape
+    MAXB = block_tables.shape[1]
+    if S != 1:
+        raise NotImplementedError("paged flash decode handles a single "
+                                  f"query token per row (got S={S})")
+    if H % K:
+        raise NotImplementedError(f"q heads {H} not grouped over kv {K}")
+    G = H // K
+    if window is None:
+        window = 1 << 30
+    window = jnp.asarray(window, jnp.int32).reshape(1)
+    qp = jnp.broadcast_to(q_pos.astype(jnp.int32).reshape(B, -1)[:, :1],
+                          (B, 1))
+    qg = q[:, 0].reshape(B, K, G, d)
+    bt = block_tables.astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, MAXB),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, si, bt: (0,)),          # window
+            pl.BlockSpec((1, 1), lambda b, h, si, bt: (b, 0)),      # q_pos
+            pl.BlockSpec((1, 1, G, d), lambda b, h, si, bt: (b, h, 0, 0)),
+            pl.BlockSpec((1, BS, 1, d),
+                         lambda b, h, si, bt:
+                         (jnp.maximum(bt[b, si], 0), 0, h, 0)),     # k block
+            pl.BlockSpec((1, BS, 1, d),
+                         lambda b, h, si, bt:
+                         (jnp.maximum(bt[b, si], 0), 0, h, 0)),     # v block
+            pl.BlockSpec((1, BS, 1),
+                         lambda b, h, si, bt:
+                         (jnp.maximum(bt[b, si], 0), 0, h)),        # k scale
+            pl.BlockSpec((1, BS, 1),
+                         lambda b, h, si, bt:
+                         (jnp.maximum(bt[b, si], 0), 0, h)),        # v scale
+            pl.BlockSpec((1, BS),
+                         lambda b, h, si, bt:
+                         (jnp.maximum(bt[b, si], 0), 0)),           # k_pos
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G, d),
+                         lambda b, h, si, bt: (b, h, si, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, si, bt: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, h, si, bt: (b, h, si, 0)),
+        ],
+    )
+    o_part, m_part, l_part = pl.pallas_call(
+        functools.partial(_paged_decode_kernel_quant,
+                          scale=1.0 / math.sqrt(d),
+                          causal=causal, softcap=softcap),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, MAXB, G, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, MAXB, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, MAXB, G), jnp.float32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(bt, window, qp, qg, kq_pool, vq_pool,
+      ks_pool.astype(jnp.float32), vs_pool.astype(jnp.float32),
+      kp_pool.astype(jnp.int32))
+
+    out = combine_partials(o_part, m_part, l_part)         # (B, K, G, d)
+    return out.reshape(B, 1, H, d).astype(q.dtype)
+
+
 def combine_partials(o_part, m_part, l_part):
     """Log-sum-exp reduction over the split axis.
 

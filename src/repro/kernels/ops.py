@@ -30,7 +30,7 @@ def _use_pallas() -> Optional[str]:
 
 
 def flash_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
-                    softcap=None, chunk=1024):
+                    softcap=None, chunk=1024, k_scale=None, v_scale=None):
     """Backend-dispatched flash attention.
 
     q: (B, S, H, d); k, v: (B, T, K, d) where K may be the NATIVE
@@ -40,20 +40,41 @@ def flash_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
     kernel, which reads each K/V cache byte exactly once; everything
     else takes the prefill/train flash path (grouped K/V expanded
     shard-locally first).
+
+    When ``k_scale``/``v_scale`` (B, T, K) are given, k/v are a
+    quantized (int8/fp8) cache and decode dispatches to the
+    dequantize-in-kernel variant; only S == 1 supports scales here
+    (multi-token callers dequantize before calling).
     """
     mode = _use_pallas()
+    quant = k_scale is not None
     if q.shape[1] == 1:
         # decode: grouped split-KV kernel / pure-jnp twin (forward-only)
         if mode is not None:
-            from repro.kernels.flash_decode import flash_decode_pallas
+            from repro.kernels.flash_decode import (flash_decode_pallas,
+                                                    flash_decode_pallas_quant)
             try:
+                if quant:
+                    return flash_decode_pallas_quant(
+                        q, k, v, q_pos, k_pos, k_scale, v_scale,
+                        causal=causal, window=window, softcap=softcap,
+                        interpret=(mode == "interpret"))
                 return flash_decode_pallas(
                     q, k, v, q_pos, k_pos, causal=causal, window=window,
                     softcap=softcap, interpret=(mode == "interpret"))
             except NotImplementedError:
                 pass
+        if quant:
+            from repro.kernels.quant import flash_decode_quant_ref
+            return flash_decode_quant_ref(
+                q, k, v, q_pos, k_pos, k_scale, v_scale, causal=causal,
+                window=window, softcap=softcap)
         return _ref.flash_decode_ref(q, k, v, q_pos, k_pos, causal=causal,
                                      window=window, softcap=softcap)
+    if quant:
+        raise NotImplementedError(
+            "quantized K/V reach flash_attention only on the S == 1 "
+            "decode path; dequantize before multi-token attention")
     if k.shape[2] != q.shape[2]:
         # grouped K/V on a multi-token path: expand to per-shard MHA
         groups = q.shape[2] // k.shape[2]
@@ -73,7 +94,8 @@ def flash_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
 
 
 def flash_decode_paged(q, k_pool, v_pool, q_pos, kp_pool, block_tables, *,
-                       causal=True, window=None, softcap=None):
+                       causal=True, window=None, softcap=None,
+                       k_scale=None, v_scale=None):
     """Backend-dispatched paged flash decode.
 
     q: (B, 1, H, d); k_pool, v_pool: (num_blocks, block_size, K, d) —
@@ -82,16 +104,32 @@ def flash_decode_paged(q, k_pool, v_pool, q_pos, kp_pool, block_tables, *,
     block_tables: (B, max_blocks) int32, -1 = unmapped.  The Pallas
     kernel gathers pool blocks through the scalar-prefetched table
     inside the grid; the pure-jnp twin gathers with take + reshape.
+
+    ``k_scale``/``v_scale`` (num_blocks, block_size, K) mark the pools
+    as quantized (int8/fp8): the scale pools ride the same block-table
+    gather and the kernel dequantizes in-register.
     """
     mode = _use_pallas()
+    quant = k_scale is not None
     if mode is not None:
-        from repro.kernels.flash_decode import flash_decode_paged as _paged
+        from repro.kernels.flash_decode import (flash_decode_paged as _paged,
+                                                flash_decode_paged_quant)
         try:
+            if quant:
+                return flash_decode_paged_quant(
+                    q, k_pool, v_pool, q_pos, kp_pool, block_tables,
+                    k_scale, v_scale, causal=causal, window=window,
+                    softcap=softcap, interpret=(mode == "interpret"))
             return _paged(q, k_pool, v_pool, q_pos, kp_pool, block_tables,
                           causal=causal, window=window, softcap=softcap,
                           interpret=(mode == "interpret"))
         except NotImplementedError:
             pass
+    if quant:
+        from repro.kernels.quant import flash_decode_paged_quant_ref
+        return flash_decode_paged_quant_ref(
+            q, k_pool, v_pool, q_pos, kp_pool, block_tables,
+            k_scale, v_scale, causal=causal, window=window, softcap=softcap)
     return _ref.flash_decode_paged_ref(q, k_pool, v_pool, q_pos, kp_pool,
                                        block_tables, causal=causal,
                                        window=window, softcap=softcap)

@@ -1,0 +1,168 @@
+"""Quantized KV-cache: quantize-on-write helpers, scale layout, ref twins.
+
+The decode path is memory-bound: PR 4 made every cache byte leave HBM
+exactly once, PR 6 made those bytes block-pooled — the remaining lever
+is *fewer bytes per cache line*.  K/V rows are stored in int8 (or
+fp8-e4m3 where jax ships the dtype) with one float32 scale per token
+per KV head, and dequantized inside the kernels so compute stays
+bf16/f32 and the split-KV LSE epilogue is untouched.
+
+Scale layout
+  contiguous cache   k  (B, T, K, hd)  quantized    k_scale  (B, T, K)  f32
+  paged cache        k  (NB, BS, K, hd) quantized   k_scale  (NB, BS, K) f32
+
+One scale per (token, head) vector keeps the scheme write-local: an
+appended row quantizes independently, so neither decode-step scatter
+nor paged prefill ever requantizes existing cache lines, and a scale
+rides every layout the data does (same leading axes, head_dim dropped).
+
+Quantization grids
+  int8   scale = amax / 127,  q = round(x / scale)      |err| <= amax/254
+  fp8    scale = amax / 448,  q = fp8_e4m3(x / scale)   |err| <= amax/16
+
+(3 mantissa bits -> round-to-nearest relative error <= 2**-4; the int8
+bound is half the grid step.)  ``quant_error_bound`` returns exactly
+these bounds — the hypothesis round-trip test holds them per vector.
+
+The ref twins mirror ``flash_decode_ref``/``flash_decode_paged_ref``
+with the dequant *inside* the ``vmem:flashdecode`` named scope, so
+``core.hlo_cost`` charges only quantized K/V bytes + scales at the
+scope boundary — that is the bytes-per-token win ``kernel_bench``
+asserts without TPU hardware.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import flash_decode_ref, quantize_e4m3_ref
+
+# storage dtype per user-facing kv_dtype name; "bf16" means unquantized
+_FP8 = getattr(jnp, "float8_e4m3fn", None)
+KV_DTYPES = ("bf16", "int8", "fp8")
+QUANTIZED_KV_DTYPES = ("int8", "fp8")
+
+_INT8_MAX = 127.0
+_FP8_MAX = 448.0
+_SCALE_FLOOR = 1e-30                      # mxp_gemm_ref precedent
+
+
+def have_fp8() -> bool:
+    """True when this jax build ships ``float8_e4m3fn``."""
+    return _FP8 is not None
+
+
+def kv_cache_dtype(kv_dtype: str):
+    """Storage dtype of the cache's k/v leaves for ``kv_dtype``."""
+    if kv_dtype == "bf16":
+        return jnp.bfloat16
+    if kv_dtype == "int8":
+        return jnp.int8
+    if kv_dtype == "fp8":
+        if _FP8 is None:
+            raise NotImplementedError(
+                "kv_dtype='fp8' needs jnp.float8_e4m3fn, which this jax "
+                "build does not provide; use 'int8'")
+        return _FP8
+    raise ValueError(f"unknown kv_dtype {kv_dtype!r}; expected one of "
+                     f"{KV_DTYPES}")
+
+
+def kv_bytes_per_vector(head_dim: int, kv_dtype: str) -> int:
+    """HBM bytes one (token, head) K or V vector occupies, scale included."""
+    if kv_dtype == "bf16":
+        return head_dim * 2
+    return head_dim * jnp.dtype(kv_cache_dtype(kv_dtype)).itemsize + 4
+
+
+# ---------------------------------------------------------------------------
+def quantize_kv(x: jax.Array, kv_dtype: str
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize K/V vectors ``x (..., head_dim)`` for storage.
+
+    Returns ``(q, scale)`` with ``q`` of ``kv_cache_dtype(kv_dtype)``
+    and ``scale (...,)`` float32 — one scale per (token, head) vector.
+    """
+    if kv_dtype not in QUANTIZED_KV_DTYPES:
+        raise ValueError(f"quantize_kv: kv_dtype {kv_dtype!r} is not a "
+                         f"quantized dtype {QUANTIZED_KV_DTYPES}")
+    xf = x.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), _SCALE_FLOOR)
+    if kv_dtype == "int8":
+        scale = amax / _INT8_MAX
+        q = jnp.clip(jnp.round(xf / scale[..., None]),
+                     -_INT8_MAX, _INT8_MAX).astype(jnp.int8)
+        return q, scale
+    scale = amax / _FP8_MAX
+    v = xf / scale[..., None]
+    if _FP8 is not None:
+        return v.astype(_FP8), scale
+    # jax without the dtype: emulated e4m3 grid, stored as f32 (tests only;
+    # cache_spec refuses 'fp8' before any cache is built on such a jax)
+    return quantize_e4m3_ref(v), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_kv` — float32 out."""
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+def quant_error_bound(x: jax.Array, kv_dtype: str) -> jax.Array:
+    """Theoretical per-element |x - dequant(quantize(x))| bound, one
+    entry per (token, head) vector of ``x (..., head_dim)``."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                       _SCALE_FLOOR)
+    if kv_dtype == "int8":
+        return amax / (2.0 * _INT8_MAX)
+    return amax * 2.0 ** -4
+
+
+# -- golden ref twins --------------------------------------------------------
+def flash_decode_quant_ref(q, kq, vq, q_pos, k_pos, k_scale, v_scale, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None):
+    """Quantized twin of ``flash_decode_ref`` (contiguous cache).
+
+    ``kq/vq (B, T, K, hd)`` quantized, ``k_scale/v_scale (B, T, K)``
+    f32.  The dequant sits inside the same ``vmem:flashdecode`` scope
+    the bf16 twin uses, so only quantized bytes + scales cross the
+    HBM boundary in the cost model.
+    """
+    with jax.named_scope("vmem:flashdecode"):
+        k = dequantize_kv(kq, k_scale)
+        v = dequantize_kv(vq, v_scale)
+    return flash_decode_ref(q, k, v, q_pos, k_pos, causal=causal,
+                            window=window, softcap=softcap)
+
+
+def flash_decode_paged_quant_ref(q, kq_pool, vq_pool, q_pos, kp_pool,
+                                 block_tables, ks_pool, vs_pool, *,
+                                 causal: bool = True,
+                                 window: Optional[int] = None,
+                                 softcap: Optional[float] = None):
+    """Quantized twin of ``flash_decode_paged_ref``.
+
+    ``kq_pool/vq_pool (NB, BS, K, hd)`` quantized, ``ks_pool/vs_pool
+    (NB, BS, K)`` f32, gathered per request through ``block_tables``
+    exactly like the data blocks.  The gather stays *outside* the vmem
+    scope — structurally parallel to ``flash_decode_paged_ref`` — so the
+    cost-model comparison against bf16 is byte-for-byte symmetric; only
+    the dequant joins the fused attention region.
+    """
+    B, MAXB = block_tables.shape
+    NB, BS, K, d = kq_pool.shape
+    safe = jnp.maximum(block_tables, 0)
+    kq = kq_pool[safe].reshape(B, MAXB * BS, K, d)
+    vq = vq_pool[safe].reshape(B, MAXB * BS, K, d)
+    ks = ks_pool[safe].reshape(B, MAXB * BS, K)
+    vs = vs_pool[safe].reshape(B, MAXB * BS, K)
+    kp = kp_pool[safe].reshape(B, MAXB * BS)
+    kp = jnp.where(jnp.repeat(block_tables, BS, axis=1) >= 0, kp, -1)
+    with jax.named_scope("vmem:flashdecode"):
+        k = dequantize_kv(kq, ks)
+        v = dequantize_kv(vq, vs)
+    return flash_decode_ref(q, k, v, q_pos, kp, causal=causal,
+                            window=window, softcap=softcap)

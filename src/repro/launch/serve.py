@@ -57,6 +57,12 @@ def build_parser() -> argparse.ArgumentParser:
                     default=True,
                     help="paged KV: reuse shared prompt-prefix blocks "
                          "across requests (default on)")
+    ap.add_argument("--kv-dtype", choices=("bf16", "int8", "fp8"),
+                    default="bf16",
+                    help="KV-cache storage dtype: int8/fp8 store quantized "
+                         "K/V with per-token-per-head f32 scales and "
+                         "dequantize inside the decode kernels "
+                         "(dense global-attention archs)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
@@ -78,7 +84,7 @@ def main(argv=None) -> int:
             f"{cfg.name}: encoder-decoder/audio serving is not supported by "
             "the Engine (needs src_embeds plumbing); use the launch.dryrun "
             "serve cells instead")
-    model = build_model(cfg, remat="none")
+    model = build_model(cfg, remat="none", kv_dtype=args.kv_dtype)
     params = model.init(jax.random.key(args.seed), dtype=jnp.float32)
 
     plan = None
@@ -111,7 +117,8 @@ def main(argv=None) -> int:
     results = engine.run(max_ticks=100_000)
 
     print(f"{cfg.name}: {len(results)} requests, slots={args.slots}, "
-          f"ticks={engine.ticks}")
+          f"ticks={engine.ticks}, kv_dtype={engine.kv_dtype} "
+          f"({engine.kv_bytes_per_token} B/token)")
     for rid in sorted(results):
         r = results[rid]
         m = r.metrics

@@ -234,11 +234,20 @@ def attention(
                                       block_tables) — K/V gathered from the
                                       global block pool through per-row
                                       block tables (serving paged KV)
+      * quantized decode:             cache_kv = (k, v, k_pos, k_scale,
+                                      v_scale) contiguous or (k_pool,
+                                      v_pool, kp_pool, block_tables,
+                                      ks_pool, vs_pool) paged — K/V stored
+                                      int8/fp8 with f32 per-(token, head)
+                                      scales; S == 1 dequantizes inside
+                                      the flash-decode kernels, S > 1
+                                      dequantizes before attending
     """
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     G = H // K
     B, S, _ = x.shape
-    paged = cache_kv is not None and len(cache_kv) == 4
+    paged = cache_kv is not None and len(cache_kv) in (4, 6)
+    quant = cache_kv is not None and len(cache_kv) in (5, 6)
 
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
     q = constrain(q, "batch", None, "act_heads", None)
@@ -268,12 +277,19 @@ def attention(
         else:
             q_pos = positions if positions.ndim <= 2 else positions[0]
     else:
+        k_scale = v_scale = None
         if paged:
-            k_pool, v_pool, kp_pool, btab = cache_kv
+            if quant:
+                k_pool, v_pool, kp_pool, btab, k_scale, v_scale = cache_kv
+            else:
+                k_pool, v_pool, kp_pool, btab = cache_kv
             k = v = k_pos = None
             T = btab.shape[1] * k_pool.shape[1]
         else:
-            k, v, k_pos = cache_kv
+            if quant:
+                k, v, k_pos, k_scale, v_scale = cache_kv
+            else:
+                k, v, k_pos = cache_kv
             T = k.shape[1]
         if not use_rope:
             q_pos = positions if positions.ndim <= 2 else positions[0]
@@ -306,9 +322,18 @@ def attention(
         if S == 1:
             out = flash_decode_paged(q, k_pool, v_pool, q_pos, kp_pool,
                                      btab, causal=causal, window=window,
-                                     softcap=cfg.logit_softcap)
+                                     softcap=cfg.logit_softcap,
+                                     k_scale=k_scale, v_scale=v_scale)
         else:
             kg, vg, kpg = gather_paged_kv(k_pool, v_pool, kp_pool, btab)
+            if quant:
+                # suffix prefill (cold path): gather the scale pools along
+                # the same tables and widen before the multi-token kernel
+                from repro.kernels.quant import dequantize_kv
+                safe = jnp.maximum(btab.astype(jnp.int32), 0)
+                kg = dequantize_kv(kg, k_scale[safe].reshape(B, -1, K))
+                vg = dequantize_kv(vg, v_scale[safe].reshape(B, -1, K))
+                kg, vg = kg.astype(q.dtype), vg.astype(q.dtype)
             out = flash_attention(q, kg, vg, q_pos, kpg, causal=causal,
                                   window=window, softcap=cfg.logit_softcap,
                                   chunk=chunk)
@@ -322,9 +347,16 @@ def attention(
         from repro.kernels.ops import flash_attention
         k = constrain(k, "batch", None, "cache_kv", None)
         v = constrain(v, "batch", None, "cache_kv", None)
+        if quant and S > 1:
+            # multi-token path dequantizes up front (decode S == 1 keeps
+            # the narrow bytes all the way into the kernel)
+            from repro.kernels.quant import dequantize_kv
+            k = dequantize_kv(k, k_scale).astype(q.dtype)
+            v = dequantize_kv(v, v_scale).astype(q.dtype)
+            k_scale = v_scale = None
         out = flash_attention(q, k, v, q_pos, k_pos_b, causal=causal,
                               window=window, softcap=cfg.logit_softcap,
-                              chunk=chunk)
+                              chunk=chunk, k_scale=k_scale, v_scale=v_scale)
     else:
         # GQA -> per-shard MHA (see _expand_kv) keeps head sharding
         # aligned on the multi-token train/prefill paths.

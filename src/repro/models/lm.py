@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import Family, ModelConfig, ShapeConfig, StepKind
+from repro.kernels import quant as Q
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import ssm as S
@@ -182,6 +183,33 @@ def _cache_write(kc, vc, pc, k_new, v_new, pos):
     return kc, vc, pc
 
 
+def _cache_write_quant(kc, vc, pc, ksc, vsc, k_new, v_new, pos, kv_dtype):
+    """Quantize-at-scatter twin of ``_cache_write``.
+
+    kc, vc: (B, T, K, hd) int8/fp8; ksc, vsc: (B, T, K) f32 scales —
+    one per (token, head) vector, so an appended row quantizes
+    independently and no existing cache line is ever requantized."""
+    B, T = pc.shape
+    kq, ks = Q.quantize_kv(k_new, kv_dtype)        # (B, 1, K, hd), (B, 1, K)
+    vq, vs = Q.quantize_kv(v_new, kv_dtype)
+    kq, vq = kq.astype(kc.dtype), vq.astype(vc.dtype)
+    slot = jnp.mod(pos.astype(jnp.int32), T)
+    if pos.ndim == 0:
+        upd = jax.lax.dynamic_update_slice_in_dim
+        kc, vc = upd(kc, kq, slot, 1), upd(vc, vq, slot, 1)
+        ksc, vsc = upd(ksc, ks, slot, 1), upd(vsc, vs, slot, 1)
+        pc = upd(pc, jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32),
+                 slot, 1)
+        return kc, vc, pc, ksc, vsc
+    rows = jnp.arange(B)
+    kc = kc.at[rows, slot].set(kq[:, 0])
+    vc = vc.at[rows, slot].set(vq[:, 0])
+    ksc = ksc.at[rows, slot].set(ks[:, 0])
+    vsc = vsc.at[rows, slot].set(vs[:, 0])
+    pc = pc.at[rows, slot].set(pos.astype(jnp.int32))
+    return kc, vc, pc, ksc, vsc
+
+
 def _paged_cache_write(kc, vc, pc, k_new, v_new, pos, bt):
     """Scatter new KV into the global block pool through block tables.
 
@@ -213,17 +241,55 @@ def _paged_cache_write(kc, vc, pc, k_new, v_new, pos, bt):
     return kc, vc, pc
 
 
+def _paged_cache_write_quant(kc, vc, pc, ksc, vsc, k_new, v_new, pos, bt,
+                             kv_dtype):
+    """Quantize-at-scatter twin of ``_paged_cache_write``.
+
+    The scale pools (num_blocks, block_size, K) take the SAME invalid →
+    ``num_blocks`` drop-mode routing as the data pools: a scale for a
+    dropped token must never land on block -1's wraparound either."""
+    NB, BS = pc.shape
+    MAXB = bt.shape[1]
+    kq, ks = Q.quantize_kv(k_new, kv_dtype)        # (B, S, K, hd), (B, S, K)
+    vq, vs = Q.quantize_kv(v_new, kv_dtype)
+    kq, vq = kq.astype(kc.dtype), vq.astype(vc.dtype)
+    p = pos.astype(jnp.int32)
+    if p.ndim == 1:
+        p = p[:, None]                                     # (B, 1)
+    bidx = jnp.clip(p // BS, 0, MAXB - 1)
+    blk = jnp.take_along_axis(bt, bidx, axis=1)            # (B, S)
+    ok = (p >= 0) & (p // BS < MAXB) & (blk >= 0)
+    blk = jnp.where(ok, blk, NB)
+    off = jnp.where(ok, jnp.mod(p, BS), 0)
+    kc = kc.at[blk, off].set(kq, mode="drop")
+    vc = vc.at[blk, off].set(vq, mode="drop")
+    ksc = ksc.at[blk, off].set(ks, mode="drop")
+    vsc = vsc.at[blk, off].set(vs, mode="drop")
+    pc = pc.at[blk, off].set(p, mode="drop")
+    return kc, vc, pc, ksc, vsc
+
+
 # ---------------------------------------------------------------------------
 class DecoderModel:
-    """Functional wrapper: config + param defs + step functions."""
+    """Functional wrapper: config + param defs + step functions.
+
+    ``kv_dtype`` is the per-model serving opt-in for the quantized KV
+    cache: "bf16" (default, unquantized), "int8", or "fp8" (e4m3, where
+    the jax build ships the dtype).  Quantized caches are supported for
+    dense global-attention models, contiguous and paged; training and
+    prefill compute are untouched — only the cache storage narrows.
+    """
 
     def __init__(self, cfg: ModelConfig, *, remat: str = "full",
                  moe_impl: str = "sorted_capacity",
-                 logits_chunk: int = 512):
+                 logits_chunk: int = 512, kv_dtype: str = "bf16"):
+        if kv_dtype not in Q.KV_DTYPES:
+            raise ValueError(f"kv_dtype {kv_dtype!r} not in {Q.KV_DTYPES}")
         self.cfg = cfg
         self.remat = remat
         self.moe_impl = moe_impl
         self.logits_chunk = logits_chunk
+        self.kv_dtype = kv_dtype
 
     # -- params ------------------------------------------------------------
     def param_defs(self) -> Dict:
@@ -349,7 +415,8 @@ class DecoderModel:
 
     # -- serving -----------------------------------------------------------
     def cache_spec(self, batch_size: int, cache_len: int, *,
-                   paged: Optional[Tuple[int, int]] = None) -> Dict:
+                   paged: Optional[Tuple[int, int]] = None,
+                   kv_dtype: Optional[str] = None) -> Dict:
         """Abstract cache structure (ShapeDtypeStructs) for serve shapes.
 
         ``paged=(num_blocks, block_size)`` swaps the per-row contiguous
@@ -358,8 +425,24 @@ class DecoderModel:
         (layers, num_blocks, block_size) — no batch axis; requests
         address the pool through block tables carried in the decode
         batch.  Paged mode supports dense global-attention caches only
-        (no SSM/hybrid state, no windowed ring layouts, no M-RoPE)."""
+        (no SSM/hybrid state, no windowed ring layouts, no M-RoPE).
+
+        ``kv_dtype`` (defaults to the model's) narrows the k/v storage
+        to int8/fp8 and adds f32 ``k_scale``/``v_scale`` leaves — one
+        scale per (token, head) vector, same leading axes as k/v with
+        head_dim dropped.  Quantized caches are dense-global only (the
+        windowed ring layouts and SSM state keep bf16)."""
         cfg = self.cfg
+        kv_dtype = self.kv_dtype if kv_dtype is None else kv_dtype
+        quant = kv_dtype in Q.QUANTIZED_KV_DTYPES
+        kv_store = Q.kv_cache_dtype(kv_dtype)
+        if quant and (not cfg.uses_attention
+                      or cfg.family in (Family.SSM, Family.HYBRID)
+                      or window_layout(cfg, cache_len) is not None
+                      or cfg.m_rope_sections is not None):
+            raise NotImplementedError(
+                "quantized KV cache supports dense global-attention "
+                f"models only (family={cfg.family})")
         if paged is not None:
             if (not cfg.uses_attention
                     or cfg.family in (Family.SSM, Family.HYBRID)
@@ -370,16 +453,22 @@ class DecoderModel:
                     f"models only (family={cfg.family})")
             nb, bs = paged
             Lr = cfg.num_layers
-            return {
+            c = {
                 "len": jax.ShapeDtypeStruct((), jnp.int32),
                 "k": jax.ShapeDtypeStruct(
                     (Lr, nb, bs, cfg.num_kv_heads, cfg.head_dim),
-                    jnp.bfloat16),
+                    kv_store),
                 "v": jax.ShapeDtypeStruct(
                     (Lr, nb, bs, cfg.num_kv_heads, cfg.head_dim),
-                    jnp.bfloat16),
+                    kv_store),
                 "pos": jax.ShapeDtypeStruct((Lr, nb, bs), jnp.int32),
             }
+            if quant:
+                c["k_scale"] = jax.ShapeDtypeStruct(
+                    (Lr, nb, bs, cfg.num_kv_heads), jnp.float32)
+                c["v_scale"] = jax.ShapeDtypeStruct(
+                    (Lr, nb, bs, cfg.num_kv_heads), jnp.float32)
+            return c
         c: Dict[str, Any] = {"len": jax.ShapeDtypeStruct((), jnp.int32)}
         Lr = cfg.num_layers
         if cfg.family in (Family.SSM, Family.HYBRID):
@@ -418,12 +507,19 @@ class DecoderModel:
             else:
                 c["k"] = jax.ShapeDtypeStruct(
                     (Lr, batch_size, cache_len, cfg.num_kv_heads,
-                     cfg.head_dim), jnp.bfloat16)
+                     cfg.head_dim), kv_store)
                 c["v"] = jax.ShapeDtypeStruct(
                     (Lr, batch_size, cache_len, cfg.num_kv_heads,
-                     cfg.head_dim), jnp.bfloat16)
+                     cfg.head_dim), kv_store)
                 c["pos"] = jax.ShapeDtypeStruct(
                     (Lr, batch_size, cache_len), jnp.int32)
+                if quant:
+                    c["k_scale"] = jax.ShapeDtypeStruct(
+                        (Lr, batch_size, cache_len, cfg.num_kv_heads),
+                        jnp.float32)
+                    c["v_scale"] = jax.ShapeDtypeStruct(
+                        (Lr, batch_size, cache_len, cfg.num_kv_heads),
+                        jnp.float32)
         return c
 
     def cache_logical_axes(self, spec: Dict) -> Dict:
@@ -439,6 +535,8 @@ class DecoderModel:
                           "ssm_state"),
             "k": kvax, "v": kvax,
             "pos": ("layers", "cache_batch", "cache_seq"),
+            "k_scale": ("layers", "cache_batch", "cache_seq", "cache_kv"),
+            "v_scale": ("layers", "cache_batch", "cache_seq", "cache_kv"),
             "k_loc": kvax, "v_loc": kvax,
             "pos_loc": ("layers", "cache_batch", "cache_seq"),
             "k_glob": kvax, "v_glob": kvax,
@@ -452,8 +550,10 @@ class DecoderModel:
         return {k: names[k] for k in spec}
 
     def init_cache(self, batch_size: int, cache_len: int, *,
-                   paged: Optional[Tuple[int, int]] = None) -> Dict:
-        spec = self.cache_spec(batch_size, cache_len, paged=paged)
+                   paged: Optional[Tuple[int, int]] = None,
+                   kv_dtype: Optional[str] = None) -> Dict:
+        spec = self.cache_spec(batch_size, cache_len, paged=paged,
+                               kv_dtype=kv_dtype)
 
         def zero(name, s):
             if s.dtype == jnp.int32 and s.shape and (
@@ -502,7 +602,17 @@ class DecoderModel:
                 pos1, (cfg.num_layers, B, Sq)).astype(jnp.int32)
             wl = window_layout(cfg, Sq)
             if wl is None:
-                cache["k"], cache["v"], cache["pos"] = ks, vs, pos_full
+                if self.kv_dtype in Q.QUANTIZED_KV_DTYPES:
+                    # prefill writes quantized tails: compute ran bf16, only
+                    # the cache storage narrows (scales per token per head)
+                    store = Q.kv_cache_dtype(self.kv_dtype)
+                    kq, kscale = Q.quantize_kv(ks, self.kv_dtype)
+                    vq, vscale = Q.quantize_kv(vs, self.kv_dtype)
+                    cache["k"], cache["v"] = kq.astype(store), vq.astype(store)
+                    cache["k_scale"], cache["v_scale"] = kscale, vscale
+                else:
+                    cache["k"], cache["v"] = ks, vs
+                cache["pos"] = pos_full
             else:
                 import numpy as _np
                 li = _np.asarray(wl["local_idx"], _np.int32)
@@ -606,20 +716,39 @@ class DecoderModel:
         positions = batch["positions"]
         new_cache = dict(cache)
 
-        def body(h, xs):
-            p_l, kc, vc, pc = xs
-            hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
-            k_new, v_new = L.project_kv(p_l["attn"], hln, cfg, positions)
-            kc, vc, pc = _paged_cache_write(kc, vc, pc, k_new, v_new,
-                                            positions, bt)
-            hn, _, _ = _attn_mlp_block(
-                p_l, h, cfg, positions=positions, window=None,
-                cache_kv=(kc, vc, pc, bt), moe_impl=self.moe_impl)
-            return hn, (kc, vc, pc)
+        if "k_scale" in cache:
+            def body(h, xs):
+                p_l, kc, vc, pc, ksc, vsc = xs
+                hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+                k_new, v_new = L.project_kv(p_l["attn"], hln, cfg, positions)
+                kc, vc, pc, ksc, vsc = _paged_cache_write_quant(
+                    kc, vc, pc, ksc, vsc, k_new, v_new, positions, bt,
+                    self.kv_dtype)
+                hn, _, _ = _attn_mlp_block(
+                    p_l, h, cfg, positions=positions, window=None,
+                    cache_kv=(kc, vc, pc, bt, ksc, vsc),
+                    moe_impl=self.moe_impl)
+                return hn, (kc, vc, pc, ksc, vsc)
 
-        x, (ks, vs, ps) = jax.lax.scan(
-            body, x, (params["layers"], cache["k"], cache["v"],
-                      cache["pos"]))
+            x, (ks, vs, ps, kss, vss) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"],
+                          cache["pos"], cache["k_scale"], cache["v_scale"]))
+            new_cache["k_scale"], new_cache["v_scale"] = kss, vss
+        else:
+            def body(h, xs):
+                p_l, kc, vc, pc = xs
+                hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+                k_new, v_new = L.project_kv(p_l["attn"], hln, cfg, positions)
+                kc, vc, pc = _paged_cache_write(kc, vc, pc, k_new, v_new,
+                                                positions, bt)
+                hn, _, _ = _attn_mlp_block(
+                    p_l, h, cfg, positions=positions, window=None,
+                    cache_kv=(kc, vc, pc, bt), moe_impl=self.moe_impl)
+                return hn, (kc, vc, pc)
+
+            x, (ks, vs, ps) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"],
+                          cache["pos"]))
         new_cache["k"], new_cache["v"], new_cache["pos"] = ks, vs, ps
         new_cache["len"] = jnp.maximum(cache["len"],
                                        jnp.max(positions) + 1)
@@ -698,31 +827,78 @@ class DecoderModel:
                         if getattr(pos_row, "ndim", 1) == 0
                         else pos_row.astype(jnp.int32))
 
-                def paged_body(h, xs):
-                    p_l, kc, vc, pc = xs
-                    hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
-                    k_new, v_new = L.project_kv(p_l["attn"], hln, cfg,
-                                                positions)
-                    kc, vc, pc = _paged_cache_write(kc, vc, pc, k_new,
-                                                    v_new, prow, bt)
-                    hn, _, _ = _attn_mlp_block(
-                        p_l, h, cfg, positions=positions, window=None,
-                        cache_kv=(kc, vc, pc, bt), moe_impl=self.moe_impl)
-                    return hn, (kc, vc, pc)
+                if "k_scale" in cache:
+                    def paged_body(h, xs):
+                        p_l, kc, vc, pc, ksc, vsc = xs
+                        hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+                        k_new, v_new = L.project_kv(p_l["attn"], hln, cfg,
+                                                    positions)
+                        kc, vc, pc, ksc, vsc = _paged_cache_write_quant(
+                            kc, vc, pc, ksc, vsc, k_new, v_new, prow, bt,
+                            self.kv_dtype)
+                        hn, _, _ = _attn_mlp_block(
+                            p_l, h, cfg, positions=positions, window=None,
+                            cache_kv=(kc, vc, pc, bt, ksc, vsc),
+                            moe_impl=self.moe_impl)
+                        return hn, (kc, vc, pc, ksc, vsc)
 
-                x, (ks, vs, ps) = jax.lax.scan(
-                    paged_body, x,
-                    (params["layers"], cache["k"], cache["v"], cache["pos"]))
+                    x, (ks, vs, ps, kss, vss) = jax.lax.scan(
+                        paged_body, x,
+                        (params["layers"], cache["k"], cache["v"],
+                         cache["pos"], cache["k_scale"], cache["v_scale"]))
+                    new_cache["k_scale"] = kss
+                    new_cache["v_scale"] = vss
+                else:
+                    def paged_body(h, xs):
+                        p_l, kc, vc, pc = xs
+                        hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+                        k_new, v_new = L.project_kv(p_l["attn"], hln, cfg,
+                                                    positions)
+                        kc, vc, pc = _paged_cache_write(kc, vc, pc, k_new,
+                                                        v_new, prow, bt)
+                        hn, _, _ = _attn_mlp_block(
+                            p_l, h, cfg, positions=positions, window=None,
+                            cache_kv=(kc, vc, pc, bt),
+                            moe_impl=self.moe_impl)
+                        return hn, (kc, vc, pc)
+
+                    x, (ks, vs, ps) = jax.lax.scan(
+                        paged_body, x,
+                        (params["layers"], cache["k"], cache["v"],
+                         cache["pos"]))
                 new_cache["k"], new_cache["v"], new_cache["pos"] = ks, vs, ps
             elif wl is None:
                 windows = layer_windows(cfg)
                 win_arr = (windows if windows is not None
                            else jnp.full((cfg.num_layers,), BIG_WINDOW,
                                          jnp.int32))
-                x, (ks, vs, ps) = jax.lax.scan(
-                    make_body(), x,
-                    (params["layers"], cache["k"], cache["v"], cache["pos"],
-                     win_arr))
+                if "k_scale" in cache:
+                    def quant_body(h, xs):
+                        p_l, kc, vc, pc, ksc, vsc, win = xs
+                        hln = L.rms_norm(h, p_l["ln1"]["scale"], cfg.rms_eps)
+                        k_new, v_new = L.project_kv(p_l["attn"], hln, cfg,
+                                                    positions)
+                        kc, vc, pc, ksc, vsc = _cache_write_quant(
+                            kc, vc, pc, ksc, vsc, k_new, v_new, pos_row,
+                            self.kv_dtype)
+                        hn, _, _ = _attn_mlp_block(
+                            p_l, h, cfg, positions=positions, window=win,
+                            cache_kv=(kc, vc, pc, ksc, vsc),
+                            moe_impl=self.moe_impl)
+                        return hn, (kc, vc, pc, ksc, vsc)
+
+                    x, (ks, vs, ps, kss, vss) = jax.lax.scan(
+                        quant_body, x,
+                        (params["layers"], cache["k"], cache["v"],
+                         cache["pos"], cache["k_scale"], cache["v_scale"],
+                         win_arr))
+                    new_cache["k_scale"] = kss
+                    new_cache["v_scale"] = vss
+                else:
+                    x, (ks, vs, ps) = jax.lax.scan(
+                        make_body(), x,
+                        (params["layers"], cache["k"], cache["v"],
+                         cache["pos"], win_arr))
                 new_cache["k"], new_cache["v"], new_cache["pos"] = ks, vs, ps
             elif not wl["global_idx"]:
                 # uniform sliding window (mixtral): ring caches everywhere

@@ -111,9 +111,16 @@ class Engine:
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
+                 kv_dtype: Optional[str] = None,
                  telemetry: Optional[ServingTelemetry] = None,
                  plan=None, clock=time.monotonic):
         cfg = model.cfg
+        # quantized-KV opt-in: explicit kv_dtype overrides the model's
+        # (set BEFORE jitting so every traced step sees the same cache
+        # layout); None inherits whatever the model was built with
+        if kv_dtype is not None:
+            model.kv_dtype = kv_dtype
+        self.kv_dtype = getattr(model, "kv_dtype", "bf16")
         if cfg.family in (Family.ENCDEC, Family.AUDIO):
             raise NotImplementedError(
                 "Engine serves decoder-only families; encoder-decoder "
@@ -179,7 +186,8 @@ class Engine:
                 slots, num_blocks=self.num_blocks,
                 block_size=self.block_size,
                 max_blocks_per_slot=self.max_blocks,
-                prefix_cache=prefix_cache)
+                prefix_cache=prefix_cache,
+                kv_dtype=self.kv_dtype)
             self._prefix_prefill = jax.jit(model.prefix_prefill)
         else:
             self.block_size = self.num_blocks = None
@@ -354,12 +362,19 @@ class Engine:
 
     @property
     def kv_bytes_per_token(self) -> int:
-        """Dense bf16 K+V bytes one cached token costs (per layer pair;
-        positions excluded; approximate for hybrid archs)."""
+        """Dense K+V bytes one cached token costs (per layer pair;
+        positions excluded; approximate for hybrid archs).  Byte-true
+        for the engine's kv_dtype: quantized caches charge the narrow
+        payload plus the 4-byte f32 scale per (token, head) vector, so
+        admission and kv_utilization reflect the real HBM footprint."""
         cfg = self.cfg
         if not cfg.uses_attention:
             return 0
-        return cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+        if self.kv_dtype == "bf16":
+            return cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+        from repro.kernels.quant import kv_bytes_per_vector
+        return (cfg.num_layers * 2 * cfg.num_kv_heads
+                * kv_bytes_per_vector(cfg.head_dim, self.kv_dtype))
 
     def _account(self, slot: int, req: InferenceRequest):
         """Stamp allocated-vs-used KV bytes before the slot is released
@@ -497,6 +512,7 @@ class Engine:
     def stats(self) -> Dict:
         """Aggregate serving metrics (p50/p99 TTFT, TPOT, queue wait)."""
         out = self.telemetry.summary()
+        out["kv_dtype"] = self.kv_dtype
         if self.paged:
             out["block_size"] = self.block_size
             out["num_blocks"] = self.num_blocks

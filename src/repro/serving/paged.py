@@ -47,12 +47,17 @@ class BlockPool(SlotPool):
     """
 
     def __init__(self, slots: int, *, num_blocks: int, block_size: int,
-                 max_blocks_per_slot: int, prefix_cache: bool = True):
+                 max_blocks_per_slot: int, prefix_cache: bool = True,
+                 kv_dtype: str = "bf16"):
         super().__init__(slots)
         if block_size <= 0 or num_blocks <= 0:
             raise ValueError(f"bad pool geometry: {num_blocks}x{block_size}")
         self.num_blocks = num_blocks
         self.block_size = block_size
+        # the cache's storage dtype participates in prefix identity: a
+        # bf16 block and an int8 block of the same tokens hold different
+        # bytes, so they must never satisfy each other's lookups
+        self.kv_dtype = kv_dtype
         self.max_blocks = max_blocks_per_slot
         self.block_tables = np.full((slots, max_blocks_per_slot), -1,
                                     np.int32)
@@ -106,7 +111,11 @@ class BlockPool(SlotPool):
         """
         BS = self.block_size
         out = []
-        h = b""
+        # seed the chain with the storage dtype: digests are in-memory
+        # only (never persisted), so keying them per-dtype is free and
+        # guarantees a bf16-cached prefix is never joined by an int8
+        # request sharing this pool config
+        h = self.kv_dtype.encode()
         for j in range(len(prompt) // BS):
             toks = tuple(int(t) for t in prompt[j * BS:(j + 1) * BS])
             h = hashlib.blake2b(h + np.asarray(toks, np.int64).tobytes(),

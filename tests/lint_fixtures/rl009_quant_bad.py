@@ -1,0 +1,46 @@
+"""RL009 true positive (missing-scale dequant): an int8 quantized-KV
+operand is loaded, widened to float32, and used as a magnitude without
+ever being multiplied by its scale ref.  The kernel runs and
+type-checks — the output is simply wrong by a per-vector factor of
+``amax / 127``, which no dtype assertion will ever catch.  (``* 2.0``
+does not dequantize: a Python scalar is not a per-vector scale.)
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS, COLS = 8, 128
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS", "") in ("interpret", "1")
+
+
+def _dequant_kernel(xq_ref, o_ref):
+    x = xq_ref[...].astype(jnp.float32)       # widened, scale never applied
+    o_ref[...] = x * 2.0
+
+
+def double_dequant(x):
+    assert x.shape == (ROWS, COLS) and x.shape[0] % ROWS == 0
+    xq = x.astype(jnp.int8)                   # quantized operand, no scale
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+        interpret=_interpret(),
+    )(xq)
+
+
+def run():
+    x = jnp.arange(ROWS * COLS, dtype=jnp.float32).reshape(ROWS, COLS) % 7
+    return double_dequant(x)
+
+
+def expected():
+    x = jnp.arange(ROWS * COLS, dtype=jnp.float32).reshape(ROWS, COLS) % 7
+    return x.astype(jnp.int8).astype(jnp.float32) * 2.0

@@ -1,0 +1,48 @@
+"""RL009 clean twin: the sanctioned dequant idiom — the int8 load is
+widened and immediately multiplied by its scale ref, which clears the
+``unscaled`` mark before anything is stored."""
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS, COLS = 8, 128
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS", "") in ("interpret", "1")
+
+
+def _dequant_kernel(xq_ref, s_ref, o_ref):
+    x = xq_ref[...].astype(jnp.float32) * s_ref[...][:, None]
+    o_ref[...] = x * 2.0
+
+
+def double_dequant(x):
+    assert x.shape == (ROWS, COLS) and x.shape[0] % ROWS == 0
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-30)
+    scale = (amax / 127.0).astype(jnp.float32)
+    xq = jnp.round(x / scale[:, None]).astype(jnp.int8)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0)),
+                  pl.BlockSpec((8,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+        interpret=_interpret(),
+    )(xq, scale)
+
+
+def run():
+    x = jnp.arange(ROWS * COLS, dtype=jnp.float32).reshape(ROWS, COLS) % 7
+    return double_dequant(x)
+
+
+def expected():
+    x = jnp.arange(ROWS * COLS, dtype=jnp.float32).reshape(ROWS, COLS) % 7
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-30)
+    scale = (amax / 127.0).astype(jnp.float32)
+    xq = jnp.round(x / scale[:, None]).astype(jnp.int8)
+    return xq.astype(jnp.float32) * scale[:, None] * 2.0

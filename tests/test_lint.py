@@ -114,6 +114,33 @@ def test_rule_suppressed_fixture(rule):
     assert f"repro-lint: disable={rule}" in src
 
 
+# -- RL009 missing-scale dequant fixtures ------------------------------------
+def test_rl009_quant_bad_fixture_fires_once():
+    # a quantized operand widened to float and stored without ever
+    # meeting its scale ref: exactly one RL009, no cross-rule noise
+    findings = lint_fixture("rl009_quant_bad.py")
+    assert [f.rule for f in findings] == ["RL009"]
+    assert "scale multiply" in findings[0].message
+
+
+def test_rl009_quant_clean_fixture_is_quiet():
+    # the sanctioned dequant idiom (widen, multiply by the scale ref)
+    # lints clean under ALL rules with no suppressions
+    assert lint_fixture("rl009_quant_clean.py") == []
+    assert "repro-lint" not in (FIXTURES / "rl009_quant_clean.py").read_text()
+
+
+def test_rl009_quant_fixtures_execute(monkeypatch):
+    # the oracle pairs actually run: the bad fixture is numerically
+    # wrong-by-a-scale, not a type error the runtime would have caught
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "interpret")
+    import numpy as np
+    for name in ("rl009_quant_bad", "rl009_quant_clean"):
+        mod = load_fixture_module(name)
+        got, exp = np.asarray(mod.run()), np.asarray(mod.expected())
+        assert np.max(np.abs(got - exp)) == 0.0, name
+
+
 # -- binding-form regressions ------------------------------------------------
 @pytest.mark.parametrize("name,line", [
     ("forms_modattr_import.py", 18),   # import jax.experimental.pallas as pl

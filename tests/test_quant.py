@@ -1,0 +1,428 @@
+"""Quantized KV cache validation: helpers, kernels, model, and serving.
+
+Helpers: quantize/dequantize round-trip error stays within the
+theoretical per-vector bound (``amax/254`` int8, ``amax * 2**-4`` fp8),
+byte accounting matches the scale layout.  Kernels: the interpret-mode
+quantized Pallas kernels agree with their jnp ref twins to f32
+tolerance, and both stay within an analytic error bound of the
+UNQUANTIZED golden across GQA/MQA, contiguous/paged (shuffled block
+tables), ring wraparound, sliding windows, and tanh softcap — the PR 4
+split-KV LSE epilogue is unchanged, so split count still cancels.
+Model: int8 prefill logits are bit-identical to bf16 (compute reads the
+pre-quantization activations), one decode step off the quantized cache
+stays within the propagated bound.  Serving: an int8 engine reproduces
+bf16 greedy tokens on a reduced model, ``kv_bytes_per_token`` reflects
+the real footprint, and BlockPool prefix digests are keyed by
+``kv_dtype`` so a bf16 prefix is never satisfied by an int8 request.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                      # clean env: deterministic fallback
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.configs import reduced_config
+from repro.kernels import quant as Q
+from repro.kernels.flash_decode import (flash_decode_paged_quant,
+                                        flash_decode_pallas_quant)
+from repro.kernels.quant import (flash_decode_paged_quant_ref,
+                                 flash_decode_quant_ref)
+from repro.kernels.ref import flash_decode_ref
+from repro.models.model import build_model
+from repro.serving import BlockPool, Engine, SamplingParams
+
+QUANT_DTYPES = ["int8"] + (["fp8"] if Q.have_fp8() else [])
+
+
+def _inputs(B, T, H, K, d, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, K, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, K, d), jnp.float32)
+    return q, k, v
+
+
+def _logit_tol(q, k, v, kv_dtype):
+    """Analytic decode-output error bound from per-vector K/V bounds.
+
+    The softmax weights sum to 1, so the V contribution is at most
+    ``max eb_v``; a score perturbation of at most ``||q||_2 * eb_k``
+    (Cauchy-Schwarz on q . dk / sqrt(d), ||dk||_2 <= sqrt(d) eb_k)
+    moves the convex combination by at most ``2 |v|_inf max|ds|``.
+    """
+    eb_k = float(jnp.max(Q.quant_error_bound(k, kv_dtype)))
+    eb_v = float(jnp.max(Q.quant_error_bound(v, kv_dtype)))
+    qn = float(jnp.max(jnp.linalg.norm(q.astype(jnp.float32), axis=-1)))
+    return eb_v + 2.0 * float(jnp.max(jnp.abs(v))) * qn * eb_k
+
+
+def _page_quant_cache(kq, vq, ks, vs, kp, BS, seed, extra_blocks=3):
+    """Scatter quantized (B, T, ...) leaves into pools via a SHUFFLED
+    block table — scales ride the exact same permutation as the data."""
+    B, T, K, d = kq.shape
+    assert T % BS == 0
+    nb = T // BS
+    NB = B * nb + extra_blocks
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(NB)[:B * nb].reshape(B, nb)
+    kq_pool = np.zeros((NB, BS, K, d), np.asarray(kq).dtype)
+    vq_pool = np.zeros((NB, BS, K, d), np.asarray(vq).dtype)
+    ks_pool = np.zeros((NB, BS, K), np.float32)
+    vs_pool = np.zeros((NB, BS, K), np.float32)
+    kp_pool = np.full((NB, BS), -1, np.int32)
+    for b in range(B):
+        for j in range(nb):
+            blk = perm[b, j]
+            sl = slice(j * BS, (j + 1) * BS)
+            kq_pool[blk] = np.asarray(kq)[b, sl]
+            vq_pool[blk] = np.asarray(vq)[b, sl]
+            ks_pool[blk] = np.asarray(ks)[b, sl]
+            vs_pool[blk] = np.asarray(vs)[b, sl]
+            kp_pool[blk] = np.asarray(kp, np.int32)[b, sl]
+    return (jnp.asarray(kq_pool), jnp.asarray(vq_pool),
+            jnp.asarray(ks_pool), jnp.asarray(vs_pool),
+            jnp.asarray(kp_pool), jnp.asarray(perm.astype(np.int32)))
+
+
+# ---------------------------------------------------------------------------
+# quantize/dequantize helpers
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(QUANT_DTYPES), st.integers(0, 2 ** 16),
+       st.sampled_from([0.05, 1.0, 40.0]))
+def test_roundtrip_error_within_bound(kv_dtype, seed, mag):
+    """Property: |x - deq(quant(x))| <= quant_error_bound per vector."""
+    x = mag * jax.random.normal(jax.random.key(seed), (3, 16, 2, 32))
+    q, scale = Q.quantize_kv(x, kv_dtype)
+    assert q.dtype == Q.kv_cache_dtype(kv_dtype)
+    assert scale.shape == x.shape[:-1] and scale.dtype == jnp.float32
+    err = jnp.abs(x - Q.dequantize_kv(q, scale))
+    bound = Q.quant_error_bound(x, kv_dtype)
+    # tiny fp slack: the bound itself is computed in f32
+    assert bool(jnp.all(err <= bound[..., None] * (1 + 1e-6) + 1e-12))
+
+
+def test_roundtrip_zero_and_flat_vectors():
+    """All-zero vectors hit the scale floor, not a divide-by-zero, and
+    constant vectors reconstruct exactly under int8 (amax on the grid)."""
+    z = jnp.zeros((2, 4, 1, 16))
+    q, s = Q.quantize_kv(z, "int8")
+    assert bool(jnp.all(Q.dequantize_kv(q, s) == 0.0))
+    c = jnp.full((1, 2, 1, 8), 3.0)
+    q, s = Q.quantize_kv(c, "int8")
+    np.testing.assert_allclose(np.asarray(Q.dequantize_kv(q, s)), 3.0,
+                               rtol=1e-6)
+
+
+def test_kv_bytes_per_vector_accounting():
+    """Scale-inclusive byte counts, and the headline ratio at hd=128."""
+    assert Q.kv_bytes_per_vector(128, "bf16") == 256
+    assert Q.kv_bytes_per_vector(128, "int8") == 132
+    ratio = Q.kv_bytes_per_vector(128, "bf16") / Q.kv_bytes_per_vector(
+        128, "int8")
+    assert ratio >= 1.9
+    if Q.have_fp8():
+        assert Q.kv_bytes_per_vector(128, "fp8") == 132
+
+
+def test_kv_dtype_validation():
+    with pytest.raises(ValueError):
+        Q.kv_cache_dtype("int4")
+    with pytest.raises(ValueError):
+        Q.quantize_kv(jnp.zeros((1, 8)), "bf16")
+    if not Q.have_fp8():
+        with pytest.raises(NotImplementedError):
+            Q.kv_cache_dtype("fp8")
+
+
+# ---------------------------------------------------------------------------
+# kernels: contiguous
+@pytest.mark.parametrize("H,K", [(8, 2), (8, 1)])          # GQA, MQA
+@pytest.mark.parametrize("kv_dtype", QUANT_DTYPES)
+def test_decode_quant_vs_bf16_golden(H, K, kv_dtype):
+    """Interpret-mode quantized kernel == its jnp twin to f32 tolerance;
+    both within the analytic bound of the unquantized golden."""
+    B, T, d = 2, 64, 32
+    q, k, v = _inputs(B, T, H, K, d, seed=1)
+    qp = jnp.full((B, 1), T, jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(T), (B, T))
+    kq, ks = Q.quantize_kv(k, kv_dtype)
+    vq, vs = Q.quantize_kv(v, kv_dtype)
+    golden = flash_decode_ref(q, k, v, qp, kp)
+    got = flash_decode_pallas_quant(q, kq, vq, qp, kp, ks, vs,
+                                    interpret=True, block_k=16)
+    twin = flash_decode_quant_ref(q, kq, vq, qp, kp, ks, vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(twin),
+                               atol=2e-5, rtol=2e-5)
+    tol = _logit_tol(q, k, v, kv_dtype)
+    err = float(jnp.max(jnp.abs(got - golden)))
+    assert err <= tol, f"decode maxerr {err} exceeds bound {tol}"
+    assert err > 0.0                     # quantization genuinely happened
+
+
+@pytest.mark.parametrize("case", ["ring", "window", "softcap"])
+def test_decode_quant_masking_variants(case):
+    """Ring wraparound, sliding window, and softcap run identically
+    through the quantized kernel (masks act on positions, not bytes)."""
+    B, T, H, K, d = 2, 32, 8, 2, 16
+    q, k, v = _inputs(B, T, H, K, d, seed=4)
+    kw = {}
+    if case == "ring":                   # wrapped 20 slots past capacity
+        total = 52
+        slots = jnp.arange(T)
+        kp = jnp.where(slots < total % T, slots + (total // T) * T,
+                       slots + (total // T - 1) * T)
+        kp = jnp.broadcast_to(kp, (B, T))
+        qp = jnp.full((B, 1), total, jnp.int32)
+    else:
+        kp = jnp.broadcast_to(jnp.arange(T), (B, T))
+        qp = jnp.full((B, 1), T, jnp.int32)
+        kw = {"window": 8} if case == "window" else {"softcap": 20.0}
+    kq, ks = Q.quantize_kv(k, "int8")
+    vq, vs = Q.quantize_kv(v, "int8")
+    golden = flash_decode_ref(q, k, v, qp, kp, **kw)
+    got = flash_decode_pallas_quant(q, kq, vq, qp, kp, ks, vs,
+                                    interpret=True, block_k=16, **kw)
+    twin = flash_decode_quant_ref(q, kq, vq, qp, kp, ks, vs, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(twin),
+                               atol=2e-5, rtol=2e-5)
+    assert float(jnp.max(jnp.abs(got - golden))) <= \
+        _logit_tol(q, k, v, "int8")
+
+
+def test_quant_split_kv_reduction_invariant():
+    """The LSE epilogue is untouched: the quantized kernel's result is
+    independent of the split count, like the bf16 kernel's."""
+    B, T, H, K, d = 2, 128, 8, 2, 32
+    q, k, v = _inputs(B, T, H, K, d, seed=6)
+    qp = jnp.full((B, 1), T, jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(T), (B, T))
+    kq, ks = Q.quantize_kv(k, "int8")
+    vq, vs = Q.quantize_kv(v, "int8")
+    one = flash_decode_pallas_quant(q, kq, vq, qp, kp, ks, vs,
+                                    block_k=T, interpret=True)
+    split = flash_decode_pallas_quant(q, kq, vq, qp, kp, ks, vs,
+                                      block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(split), np.asarray(one),
+                               atol=2e-6, rtol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# kernels: paged
+@pytest.mark.parametrize("H,K", [(8, 2), (8, 1)])
+@pytest.mark.parametrize("kv_dtype", QUANT_DTYPES)
+def test_paged_quant_shuffled_table(H, K, kv_dtype):
+    """Paged quantized decode through a shuffled block table: kernel ==
+    twin, both within the bound, and equal to the CONTIGUOUS quantized
+    kernel (same bytes, different layout)."""
+    B, T, d, BS = 2, 64, 32, 16
+    q, k, v = _inputs(B, T, H, K, d, seed=8)
+    L = [39, 64]                                  # mixed fills, -1 pads
+    kp = jnp.stack([jnp.where(jnp.arange(T) < n, jnp.arange(T), -1)
+                    for n in L])
+    qp = jnp.asarray(L, jnp.int32)[:, None]
+    kq, ks = Q.quantize_kv(k, kv_dtype)
+    vq, vs = Q.quantize_kv(v, kv_dtype)
+    pools = _page_quant_cache(kq, vq, ks, vs, kp, BS, seed=8)
+    kq_p, vq_p, ks_p, vs_p, kp_p, bt = pools
+    got = flash_decode_paged_quant(q, kq_p, vq_p, qp, kp_p, bt, ks_p,
+                                   vs_p, interpret=True)
+    twin = flash_decode_paged_quant_ref(q, kq_p, vq_p, qp, kp_p, bt,
+                                        ks_p, vs_p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(twin),
+                               atol=2e-5, rtol=2e-5)
+    contig = flash_decode_pallas_quant(q, kq, vq, qp, kp, ks, vs,
+                                       block_k=BS, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(contig),
+                               atol=2e-5, rtol=2e-5)
+    golden = flash_decode_ref(q, k, v, qp, kp)
+    assert float(jnp.max(jnp.abs(got - golden))) <= \
+        _logit_tol(q, k, v, kv_dtype)
+
+
+def test_paged_quant_unmapped_blocks_masked():
+    """-1 block-table entries contribute nothing (drop-routed scales
+    never resurrect a dead block)."""
+    B, T, H, K, d, BS = 2, 64, 8, 2, 16, 16
+    q, k, v = _inputs(B, T, H, K, d, seed=9)
+    kp = jnp.broadcast_to(jnp.arange(T), (B, T))
+    qp = jnp.full((B, 1), T, jnp.int32)
+    kq, ks = Q.quantize_kv(k, "int8")
+    vq, vs = Q.quantize_kv(v, "int8")
+    kq_p, vq_p, ks_p, vs_p, kp_p, bt = _page_quant_cache(
+        kq, vq, ks, vs, kp, BS, seed=9)
+    # truncate row 0 to half its blocks via -1 entries
+    bt_cut = bt.at[0, 2:].set(-1)
+    got = flash_decode_paged_quant(q, kq_p, vq_p, qp, kp_p, bt_cut,
+                                   ks_p, vs_p, interpret=True)
+    kp_cut = kp.at[0, 2 * BS:].set(-1)
+    want = flash_decode_quant_ref(q, kq, vq, qp, kp_cut, ks, vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ops_dispatch_quant(monkeypatch):
+    """ops-layer dispatch: scales route decode to the quantized kernel
+    (interpret) or twin (CPU); multi-token with scales is refused."""
+    from repro.kernels import ops
+    B, T, H, K, d = 2, 32, 8, 2, 16
+    q, k, v = _inputs(B, T, H, K, d, seed=10)
+    qp = jnp.full((B, 1), T, jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(T), (B, T))
+    kq, ks = Q.quantize_kv(k, "int8")
+    vq, vs = Q.quantize_kv(v, "int8")
+    want = flash_decode_quant_ref(q, kq, vq, qp, kp, ks, vs)
+
+    monkeypatch.delenv("REPRO_FORCE_PALLAS", raising=False)
+    cpu = ops.flash_attention(q, kq, vq, qp, kp, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(cpu), np.asarray(want),
+                               atol=2e-5)
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "interpret")
+    pal = ops.flash_attention(q, kq, vq, qp, kp, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(want),
+                               atol=2e-5)
+    with pytest.raises(NotImplementedError):
+        ops.flash_attention(jnp.repeat(q, 2, axis=1), kq, vq, qp, kp,
+                            k_scale=ks, v_scale=vs)
+
+
+# ---------------------------------------------------------------------------
+# model level
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = reduced_config("qwen3-32b")            # GQA: 4 heads over 2 kv
+    model = build_model(cfg, remat="none")
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def test_cache_spec_quant_layout(qwen):
+    cfg, model, _ = qwen
+    spec = model.cache_spec(2, 32, kv_dtype="int8")
+    assert spec["k"].dtype == jnp.int8
+    assert spec["k_scale"].shape == spec["k"].shape[:-1]
+    assert spec["k_scale"].dtype == jnp.float32
+    paged = model.cache_spec(2, 32, paged=(8, 8), kv_dtype="int8")
+    assert paged["v"].dtype == jnp.int8
+    assert paged["v_scale"].shape == paged["v"].shape[:-1]
+    # bf16 spec is unchanged by the feature
+    assert "k_scale" not in model.cache_spec(2, 32)
+
+
+@pytest.mark.parametrize("arch", ["gemma3-4b", "mamba2-1.3b"])
+def test_cache_spec_quant_rejects_non_dense(arch):
+    """Windowed ring layouts and SSM state keep bf16 — refused, not
+    silently mis-quantized."""
+    cfg = reduced_config(arch)
+    model = build_model(cfg, remat="none")
+    with pytest.raises(NotImplementedError):
+        model.cache_spec(1, 32, kv_dtype="int8")
+
+
+def test_model_prefill_bitexact_decode_bounded(qwen):
+    """Prefill logits are BIT-IDENTICAL (attention reads the activations
+    before the quantized tail is written); one decode step off the int8
+    cache stays within the propagated bound."""
+    cfg, model, params = qwen
+    B, S, Sp = 2, 12, 32
+    toks = jax.random.randint(jax.random.key(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+    toks_p = jnp.zeros((B, Sp), jnp.int32).at[:, :S].set(toks[:, :S])
+    pos = jnp.broadcast_to(
+        jnp.where(jnp.arange(Sp) < S, jnp.arange(Sp), -1), (B, Sp))
+    batch = {"tokens": toks_p, "positions": pos,
+             "length": jnp.full((B,), S, jnp.int32)}
+    dstep = {"tokens": toks[:, S:],
+             "positions": jnp.full((B, 1), S, jnp.int32),
+             "pos_row": jnp.full((B,), S, jnp.int32)}
+
+    logits_bf, cache_bf = jax.jit(model.prefill)(params, batch)
+    model.kv_dtype = "int8"
+    try:
+        logits_q, cache_q = jax.jit(model.prefill)(params, batch)
+        np.testing.assert_array_equal(np.asarray(logits_q),
+                                      np.asarray(logits_bf))
+        assert cache_q["k"].dtype == jnp.int8
+        dec_q, _ = jax.jit(model.decode_step)(params, dstep, cache_q)
+    finally:
+        model.kv_dtype = "bf16"
+    dec_bf, _ = jax.jit(model.decode_step)(params, dstep, cache_bf)
+    err = float(jnp.max(jnp.abs(dec_q - dec_bf)))
+    assert 0.0 < err <= 0.25, err        # reduced model, unit-scale logits
+
+
+# ---------------------------------------------------------------------------
+# serving
+def test_engine_int8_matches_bf16_tokens(qwen):
+    """Greedy decode: the int8 paged engine reproduces the bf16 engine's
+    tokens on a reduced model (logit gaps dwarf quantization error)."""
+    cfg, model, params = qwen
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(2, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 17, 9)]
+    sp = SamplingParams(max_new_tokens=6)
+    bf = Engine(model, params, slots=2, prefill_len=32, cache_len=48,
+                block_size=16)
+    a = [r.tokens for r in bf.generate(prompts, sp, max_ticks=99)]
+    q8 = Engine(model, params, slots=2, prefill_len=32, cache_len=48,
+                block_size=16, kv_dtype="int8")
+    b = [r.tokens for r in q8.generate(prompts, sp, max_ticks=99)]
+    assert a == b
+    assert q8.kv_dtype == "int8" and q8.stats()["kv_dtype"] == "int8"
+    assert model.kv_dtype == "int8"      # engine pins the model's dtype
+    model.kv_dtype = "bf16"              # restore for sibling tests
+
+
+def test_engine_kv_bytes_accounting(qwen):
+    cfg, model, params = qwen
+    bf = Engine(model, params, slots=1, prefill_len=16, cache_len=32)
+    expect_bf = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim * 2
+    assert bf.kv_bytes_per_token == expect_bf
+    q8 = Engine(model, params, slots=1, prefill_len=16, cache_len=32,
+                kv_dtype="int8")
+    expect_q = (cfg.num_layers * 2 * cfg.num_kv_heads
+                * Q.kv_bytes_per_vector(cfg.head_dim, "int8"))
+    assert q8.kv_bytes_per_token == expect_q < expect_bf
+    model.kv_dtype = "bf16"
+
+
+def test_blockpool_prefix_digests_keyed_by_kv_dtype():
+    """Two pools sharing one geometry: equal prompts chain to equal
+    digests within a dtype and DIFFERENT digests across dtypes, so a
+    bf16-cached prefix can never satisfy an int8 lookup."""
+    geo = dict(num_blocks=8, block_size=4, max_blocks_per_slot=4)
+    bf = BlockPool(2, **geo)
+    bf2 = BlockPool(2, **geo)
+    q8 = BlockPool(2, **geo, kv_dtype="int8")
+    prompt = np.arange(2, 14, dtype=np.int32)     # 3 full blocks
+    h_bf = [h for h, _ in bf._prefix_hashes(prompt)]
+    assert h_bf == [h for h, _ in bf2._prefix_hashes(prompt)]
+    h_q8 = [h for h, _ in q8._prefix_hashes(prompt)]
+    assert all(a != b for a, b in zip(h_bf, h_q8))
+    # a prefix registered under bf16 is invisible to the int8 pool even
+    # if the int8 pool somehow held the same index entries
+    q8._index.update(dict(zip(h_bf, [(i, ()) for i in range(3)])))
+    assert q8.probe_prefix(prompt) == 0
+
+
+def test_engine_int8_prefix_cache_self_consistent(qwen):
+    """The int8 engine's OWN prefix cache still hits (dtype keying
+    changed the digests, not the sharing semantics)."""
+    cfg, model, params = qwen
+    rng = np.random.default_rng(13)
+    sys_prompt = rng.integers(2, cfg.vocab_size, 16).astype(np.int32)
+    prompts = [np.concatenate([sys_prompt,
+                               rng.integers(2, cfg.vocab_size, n)
+                               .astype(np.int32)])
+               for n in (5, 9)]
+    e = Engine(model, params, slots=2, prefill_len=32, cache_len=48,
+               block_size=8, kv_dtype="int8")
+    res = e.generate(prompts, SamplingParams(max_new_tokens=4),
+                     max_ticks=99)
+    assert all(len(r.tokens) == 4 for r in res)
+    assert e.pool.prefix_stats()["hits"] == 1
+    model.kv_dtype = "bf16"
