@@ -24,6 +24,7 @@ SUITES = [
     ("scheduler", "benchmarks.scheduler_study"),    # §8.5 (beyond paper)
     ("serving", "benchmarks.serving_load"),         # paged KV SLOs (§7 mix)
     ("kernels", "benchmarks.kernel_bench"),         # decode-path kernels
+    ("moe", "benchmarks.moe_bench"),                # grouped-expert GEMM
     ("elastic", "benchmarks.elastic_bench"),        # §8.7 fault recovery
     ("roofline", "benchmarks.roofline_table"),      # §Roofline
     ("plan", "benchmarks.plan_scorecard"),          # parallelism planner

@@ -153,7 +153,11 @@ def gather_live_inventory(
 
     plans = [single_pod_plan(), multi_pod_plan(),
              plan_from_layout(Layout(pod=2, data=2, model=2, pipe=2),
-                              name="piped")]
+                              name="piped"),
+             # EP mesh: teaches RL010 the `expert` axis the MoE rule
+             # candidates reference (plan.py Layout.expert)
+             plan_from_layout(Layout(pod=2, data=2, expert=2, model=2),
+                              name="ep")]
     for plan in plans:
         inv.mesh_axes.update(plan.axis_names)
         if plan.pipeline is not None:

@@ -45,6 +45,10 @@ class RunTelemetry:
             "mfu": (self.flops_per_token * tokens / max(dt, 1e-9))
                    / (self.n_chips * CHIP.peak_bf16_flops),
         }
+        if "dropped_frac" in metrics:
+            # MoE capacity-truncation drop rate (0 for dense models; a
+            # sustained nonzero value means the capacity factor is tight)
+            rec["dropped_frac"] = float(metrics["dropped_frac"])
         self.records.append(rec)
         if self._fh:
             self._fh.write(json.dumps(rec) + "\n")

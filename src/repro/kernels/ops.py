@@ -159,6 +159,30 @@ def mxp_gemm(a, b, *, block: int = 128):
     return _ref.mxp_gemm_ref(a, b, block=block)
 
 
+def moe_gemm(xe, counts, w1, w3, w2, *, act: str = "silu"):
+    """Backend-dispatched grouped-expert gated FFN.
+
+    xe: (B, E, C, D) capacity blocks from the MoE sort-based dispatch
+    (rows past ``counts[b, e]`` are zero padding); counts: (B, E) int32;
+    w1, w3: (E, D, F); w2: (E, F, D); ``act`` names the gate activation
+    ("silu" | "gelu_tanh").  The Pallas kernel runs the fused blocked
+    GEMM only for single-shard lowering — under an active mesh the
+    caller keeps the einsum formulation so the TP/EP sharding
+    constraints on the hidden tile stay in effect.
+    """
+    mode = _use_pallas()
+    if mode is not None:
+        from repro.parallel.sharding import current_mesh
+        if current_mesh() is None:
+            from repro.kernels.moe_gemm import moe_gemm_pallas
+            try:
+                return moe_gemm_pallas(xe, counts, w1, w3, w2, act=act,
+                                       interpret=(mode == "interpret"))
+            except NotImplementedError:
+                pass
+    return _ref.moe_gemm_ref(xe, counts, w1, w3, w2, act=act)
+
+
 def ssd_scan(x, dt, a, b, c, *, chunk: int = 256):
     mode = _use_pallas()
     if mode is not None:

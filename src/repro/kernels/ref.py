@@ -309,6 +309,41 @@ def mxp_gemm_ref(a, b, *, block: int = 128):
 
 
 # ---------------------------------------------------------------------------
+# grouped-expert gated-FFN oracle (the MoE sorted-capacity compute core)
+_MOE_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu_tanh": functools.partial(jax.nn.gelu, approximate=True),
+}
+
+
+def resolve_moe_act(act: str):
+    try:
+        return _MOE_ACTS[act]
+    except KeyError:
+        raise ValueError(f"unknown moe activation {act!r} "
+                         f"(want one of {sorted(_MOE_ACTS)})") from None
+
+
+def moe_gemm_ref(xe, counts, w1, w3, w2, *, act: str = "silu"):
+    """Gated expert FFN over capacity blocks, pure jnp.
+
+    xe: (B, E, C, D) dispatched token blocks (rows past ``counts[b, e]``
+    are zero padding from the sort-based dispatch); w1, w3: (E, D, F);
+    w2: (E, F, D).  Returns (B, E, C, D) in ``xe.dtype``.
+
+    ``counts`` (B, E) int32 is unused here — zero-padded rows already
+    produce exactly zero output (act(0)·0 @ w2 == 0), so the dense
+    einsum over all C rows matches the row-skipping Pallas kernel
+    bit-for-bit; the kernel consumes it to skip empty row blocks.
+    """
+    del counts
+    act_fn = resolve_moe_act(act)
+    h = act_fn(jnp.einsum("becd,edf->becf", xe, w1))
+    h = h * jnp.einsum("becd,edf->becf", xe, w3)
+    return jnp.einsum("becf,efd->becd", h, w2)
+
+
+# ---------------------------------------------------------------------------
 # Mamba2 SSD chunk-scan oracle (sequential, exact)
 def ssd_scan_ref(x, dt, a, b, c, *, chunk: int):
     """Identical math to repro.models.ssm.ssd_chunked; kept separate so the

@@ -32,6 +32,13 @@ from repro.parallel.sharding import constrain
 BIG_WINDOW = 1 << 30  # "global" layers: window larger than any context
 
 
+def _zero_aux() -> Dict[str, jnp.ndarray]:
+    """Per-layer auxiliary metrics for non-MoE blocks (shape-stable with
+    the MoE aux dict so the layer scan can stack them)."""
+    return {"aux_loss": jnp.zeros((), jnp.float32),
+            "dropped_frac": jnp.zeros((), jnp.float32)}
+
+
 # ---------------------------------------------------------------------------
 def _block_defs(cfg: ModelConfig) -> Dict:
     """One decoder block's parameter definitions (pre-stacking)."""
@@ -121,7 +128,8 @@ def layer_windows(cfg: ModelConfig) -> Optional[jnp.ndarray]:
 # Block applications (shared between train / prefill / decode)
 def _attn_mlp_block(p, x, cfg, *, positions, window, cache_kv=None,
                     new_kv=None, moe_impl="sorted_capacity"):
-    """Returns (x, aux, (k, v)) — k,v only when projecting fresh kv.
+    """Returns (x, aux dict, (k, v)) — k,v only when projecting fresh kv;
+    aux carries {"aux_loss", "dropped_frac"} (zeros for non-MoE blocks).
 
     Sequence parallelism (§Perf iteration A1): the residual stream and the
     norm regions live seq-sharded over the `model` axis; GSPMD then lowers
@@ -142,7 +150,7 @@ def _attn_mlp_block(p, x, cfg, *, positions, window, cache_kv=None,
                           ) if new_kv else None
     x = x + constrain(a, "batch", "act_seq", None)
     h = L.rms_norm(x, p["ln2"]["scale"], cfg.rms_eps)
-    aux = jnp.zeros((), jnp.float32)
+    aux = _zero_aux()
     if "moe" in p:
         m, aux = M.moe(p["moe"], h, cfg, impl=moe_impl)
     else:
@@ -339,10 +347,10 @@ class DecoderModel:
         if cfg.family in (Family.SSM,):
             def body(h, p_l):
                 h, _ = _ssm_block(p_l, h, cfg)
-                return h, jnp.zeros((), jnp.float32)
+                return h, _zero_aux()
             body = self._maybe_remat(body)
             x, _ = jax.lax.scan(body, x, params["layers"])
-            aux = jnp.zeros((), jnp.float32)
+            aux = _zero_aux()
 
         elif cfg.family == Family.HYBRID:
             x, aux = self._hybrid_backbone(params, x, positions)
@@ -358,7 +366,8 @@ class DecoderModel:
             win_arr = (windows if windows is not None
                        else jnp.full((cfg.num_layers,), BIG_WINDOW, jnp.int32))
             x, auxs = jax.lax.scan(body, x, (params["layers"], win_arr))
-            aux = auxs.mean()
+            # scan stacks the per-layer aux dicts: mean each leaf over layers
+            aux = jax.tree.map(lambda a: a.mean(), auxs)
 
         x = L.rms_norm(x, params["final_norm"]["scale"], cfg.rms_eps)
         return x, aux
@@ -395,7 +404,7 @@ class DecoderModel:
         if tail:
             x = shared_apply(x)
             x, _ = jax.lax.scan(ssm_body, x, tail_p)
-        return x, jnp.zeros((), jnp.float32)
+        return x, _zero_aux()
 
     # -- losses ----------------------------------------------------------
     def loss(self, params, batch) -> Tuple[jax.Array, Dict]:
@@ -410,8 +419,11 @@ class DecoderModel:
             y = y[:, y.shape[1] - labels.shape[1]:]        # text positions only
         loss, z_loss = chunked_softmax_xent(
             y, params["embed"], cfg, labels, chunk=self.logits_chunk)
-        total = loss + 0.01 * aux + 1e-4 * z_loss
-        return total, {"xent": loss, "aux_loss": aux, "z_loss": z_loss}
+        total = loss + 0.01 * aux["aux_loss"] + 1e-4 * z_loss
+        # dropped_frac is a pure metric (stop_gradient-free but constant
+        # wrt params): the MoE capacity truncation's token-drop rate
+        return total, {"xent": loss, "aux_loss": aux["aux_loss"],
+                       "dropped_frac": aux["dropped_frac"], "z_loss": z_loss}
 
     # -- serving -----------------------------------------------------------
     def cache_spec(self, batch_size: int, cache_len: int, *,

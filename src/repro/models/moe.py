@@ -28,8 +28,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import Activation, ModelConfig
+from repro.kernels import ops
 from repro.models.param import PDef
-from repro.parallel.sharding import constrain
+from repro.parallel.sharding import constrain, current_mesh
 
 
 def moe_defs(cfg: ModelConfig) -> Dict:
@@ -47,6 +48,11 @@ def _act(cfg: ModelConfig):
             else functools.partial(jax.nn.gelu, approximate=True))
 
 
+def _act_name(cfg: ModelConfig) -> str:
+    """Activation name for the kernels layer (kernels.ref._MOE_ACTS)."""
+    return "silu" if cfg.activation == Activation.SWIGLU else "gelu_tanh"
+
+
 def router_probs(p: Dict, x: jax.Array, cfg: ModelConfig):
     """x: (B, S, D) -> probs (B, S, E) fp32, top-k weights/ids (B, S, k)."""
     logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
@@ -59,8 +65,13 @@ def router_probs(p: Dict, x: jax.Array, cfg: ModelConfig):
 
 def aux_load_balance_loss(probs: jax.Array, top_ids: jax.Array,
                           num_experts: int) -> jax.Array:
-    """Switch-style load-balancing auxiliary loss."""
-    # fraction of tokens routed to each expert (via top-1 of the top-k set)
+    """Switch-style load-balancing auxiliary loss, generalized to top-k:
+    ``E · Σ_e f_e · P_e`` where ``f_e`` is the fraction of ALL ``B·S·k``
+    routed assignments landing on expert e and ``P_e`` the mean router
+    probability.  A uniform router gives f_e = P_e = 1/E → loss = 1
+    regardless of k (the value tests pin)."""
+    # fraction of routed assignments per expert — the mean over axis 2
+    # averages across all k top-k slots, not just the top-1
     counts = jax.nn.one_hot(top_ids, num_experts).mean(axis=(0, 1, 2))
     importance = probs.mean(axis=(0, 1))
     return num_experts * jnp.sum(counts * importance)
@@ -99,8 +110,13 @@ def _dispatch_one(x_s, top_w, top_ids, *, E: int, C: int):
 
 def moe_sorted_capacity(p: Dict, x: jax.Array, cfg: ModelConfig,
                         capacity_factor: float = 1.25
-                        ) -> Tuple[jax.Array, jax.Array]:
-    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+                        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, D) -> (out (B, S, D), aux dict).
+
+    The aux dict carries ``aux_loss`` (load-balancing) and
+    ``dropped_frac`` — the fraction of the B·S·k routed assignments the
+    capacity truncation silently dropped (0 at capacity_factor >= E/k
+    in the worst case; telemetry surfaces it per step)."""
     B, S, D = x.shape
     E, k = cfg.num_experts, cfg.num_experts_per_tok
     C = int(max(1, round(k * S / E * capacity_factor)))
@@ -111,19 +127,29 @@ def moe_sorted_capacity(p: Dict, x: jax.Array, cfg: ModelConfig,
     xe, comb_w, tok_idx = jax.vmap(
         functools.partial(_dispatch_one, E=E, C=C))(x, top_w, top_ids)
     xe = constrain(xe, "batch", "act_exp", None, "act_embed")
+    # valid rows per (b, e) capacity block (rank-ordered prefix; sentinel
+    # S marks empty/dropped slots) — feeds both the grouped kernel's
+    # block skipping and the drop-rate metric
+    counts = (tok_idx < S).sum(axis=-1).astype(jnp.int32)
+    dropped_frac = 1.0 - counts.sum().astype(jnp.float32) / (B * S * k)
 
-    # vmem:moe — on TPU the gated expert FFN runs as a megablox-style
-    # grouped-GEMM kernel: the (E, C, F) hidden tile stays in VMEM
-    # (§Perf iteration B2; the cost model discounts intra-scope traffic)
+    # vmem:moe — on TPU the gated expert FFN runs as the grouped-GEMM
+    # Pallas kernel (kernels.moe_gemm): the (E, C, F) hidden tile stays
+    # in VMEM (§Perf iteration B2; the cost model discounts intra-scope
+    # traffic).  Under an active mesh we keep the einsum formulation so
+    # the TP/EP constraint on the hidden tile shapes the lowering.
     with jax.named_scope("vmem:moe"):
-        act = _act(cfg)
         w1 = p["w1"].astype(x.dtype)
         w2 = p["w2"].astype(x.dtype)
         w3 = p["w3"].astype(x.dtype)
-        h = act(jnp.einsum("becd,edf->becf", xe, w1))
-        h = h * jnp.einsum("becd,edf->becf", xe, w3)
-        h = constrain(h, "batch", "act_exp", None, "act_mlp")
-        ye = jnp.einsum("becf,efd->becd", h, w2)       # (B, E, C, D)
+        if current_mesh() is not None:
+            act = _act(cfg)
+            h = act(jnp.einsum("becd,edf->becf", xe, w1))
+            h = h * jnp.einsum("becd,edf->becf", xe, w3)
+            h = constrain(h, "batch", "act_exp", None, "act_mlp")
+            ye = jnp.einsum("becf,efd->becd", h, w2)   # (B, E, C, D)
+        else:
+            ye = ops.moe_gemm(xe, counts, w1, w3, w2, act=_act_name(cfg))
 
     # combine in the wire dtype (bf16): the router-weighted scatter-add and
     # its TP partial-reduction must not ride in f32 (B2)
@@ -138,11 +164,12 @@ def moe_sorted_capacity(p: Dict, x: jax.Array, cfg: ModelConfig,
     # NOTE (B3): constraining out to act_seq here stacked a reshard on top
     # of the block-level residual constraint (+10% collective, measured);
     # the block boundary handles SP placement instead.
-    return constrain(out, "batch", None, "act_embed"), aux
+    return (constrain(out, "batch", None, "act_embed"),
+            {"aux_loss": aux, "dropped_frac": dropped_frac})
 
 
 def moe_dense(p: Dict, x: jax.Array, cfg: ModelConfig
-              ) -> Tuple[jax.Array, jax.Array]:
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Oracle: all experts computed, router-weighted sum (no drops)."""
     E, k = cfg.num_experts, cfg.num_experts_per_tok
     probs, top_w, top_ids = router_probs(p, x, cfg)
@@ -156,11 +183,12 @@ def moe_dense(p: Dict, x: jax.Array, cfg: ModelConfig
     h = h * jnp.einsum("bsd,edf->bsef", x, p["w3"].astype(x.dtype))
     ye = jnp.einsum("bsef,efd->bsed", h, p["w2"].astype(x.dtype))
     out = jnp.einsum("bsed,bse->bsd", ye, gate.astype(x.dtype))
-    return out, aux
+    return out, {"aux_loss": aux, "dropped_frac": jnp.zeros((), jnp.float32)}
 
 
 def moe(p: Dict, x: jax.Array, cfg: ModelConfig, impl: str = "sorted_capacity",
-        capacity_factor: float = 1.25) -> Tuple[jax.Array, jax.Array]:
+        capacity_factor: float = 1.25
+        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     if impl == "dense":
         return moe_dense(p, x, cfg)
     return moe_sorted_capacity(p, x, cfg, capacity_factor)

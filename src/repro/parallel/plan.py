@@ -47,6 +47,16 @@ Traffic model (documented invariants, per training step):
   bandwidth (``FabricSpec.nic_bw``); the spine leg is charged against
   the leaf–spine bisection with the DCQCN throughput factor for the
   synchronized-burst oversubscription the paper measures in Table 10.
+* Expert parallelism is a first-class axis.  MoE configs enumerate
+  ``(pod, data, expert, model[, pipe])`` factorizations: the routed
+  dispatch/combine all-to-all rides intra-pod rails when the ``expert``
+  axis stays inside a pod, while an *expert-spanning* layout (expert
+  axis on the pod cut) keeps the heavy expert-weight gradients off the
+  spine entirely — each expert's DP replicas share a pod — and pays only
+  the dense-parameter all-reduce plus the pod-crossing all-to-all share,
+  charged with an extra DCQCN aggravation factor (all-to-all is
+  synchronized N:1 bursts into each spine port, far worse incast than a
+  pipelined ring all-reduce).
 """
 from __future__ import annotations
 
@@ -69,6 +79,9 @@ GRAD_WIRE_BYTES = 4          # fp32 master gradients on the wire
 ACT_WIRE_BYTES = 2           # bf16 activations / boundary tensors
 RAIL_EFFICIENCY = 0.85       # achievable fraction of NIC line rate
 OVERLAP = 0.7                # comm/compute overlap (Table 10: ~72% measured)
+A2A_INCAST_FACTOR = 1.5      # all-to-all synchronized-burst load on the
+                             # spine vs a pipelined ring (DCQCN sees the
+                             # instantaneous N:1 fan-in, not the mean)
 
 _COMPRESS_FACTOR = {"none": 1.0, "bf16": 0.5, "int8": 0.25, "int8_ef": 0.25}
 
@@ -112,25 +125,36 @@ class CollectiveSchedule:
 
 @dataclass(frozen=True)
 class Layout:
-    """One candidate (pod, data, model[, pipe]) factorization."""
+    """One candidate (pod, data, expert, model[, pipe]) factorization.
+
+    ``expert`` is the EP degree for MoE configs (1 for dense).  The
+    expert axis acts as data parallelism for every non-routed weight
+    (``dp_ranks`` includes it); ``expert_spans_pods`` places it on the
+    pod cut so each expert's DP replicas share a pod and expert-weight
+    gradients never cross the spine."""
     pod: int = 1
     data: int = 1
     model: int = 1
     pipe: int = 1
     pipe_spans_pods: bool = False
+    expert: int = 1
+    expert_spans_pods: bool = False
 
     @property
     def chips(self) -> int:
-        return self.pod * self.data * self.model * self.pipe
+        return self.pod * self.data * self.expert * self.model * self.pipe
 
     @property
     def dp_ranks(self) -> int:
-        return self.pod * self.data
+        # EP is data parallelism for everything but the routed FFN
+        return self.pod * self.data * self.expert
 
     def mesh_tuple(self) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
         """(shape, axis_names); the pod-spanning axis is slowest-varying so
         contiguous device halves land in contiguous pods."""
         dims: List[Tuple[str, int]] = []
+        if self.expert > 1 and self.expert_spans_pods:
+            dims.append(("expert", self.expert))
         if self.pipe > 1 and self.pipe_spans_pods:
             dims.append(("pipe", self.pipe))
         if self.pod > 1:
@@ -139,6 +163,8 @@ class Layout:
             dims.append(("pipe", self.pipe))
         if self.data > 1:
             dims.append(("data", self.data))
+        if self.expert > 1 and not self.expert_spans_pods:
+            dims.append(("expert", self.expert))
         if self.model > 1:
             dims.append(("model", self.model))
         if not dims:
@@ -150,6 +176,9 @@ class Layout:
         if self.pipe > 1:
             parts.append(f"pipe={self.pipe}"
                          + ("⊗pod" if self.pipe_spans_pods else ""))
+        if self.expert > 1:
+            parts.append(f"expert={self.expert}"
+                         + ("⊗pod" if self.expert_spans_pods else ""))
         if self.pod > 1:
             parts.append(f"pod={self.pod}")
         parts.append(f"data={self.data}")
@@ -257,6 +286,16 @@ def score_layout(cfg: ModelConfig, shape: ShapeConfig, layout: Layout,
     chips = layout.chips
 
     param_bytes = cfg.param_count() * GRAD_WIRE_BYTES
+    # routed-expert weights (w1/w3/w2 per expert, config.param_count's MoE
+    # branch) vs the dense remainder: with a real `expert` axis only the
+    # dense share is replicated across it, and an expert-spanning layout
+    # keeps the (dominant, for Mixtral-class models) expert gradients off
+    # the spine entirely
+    expert_param_bytes = 0.0
+    if cfg.num_experts:
+        expert_param_bytes = (cfg.num_layers * 3 * cfg.d_model * cfg.d_ff
+                              * cfg.num_experts * GRAD_WIRE_BYTES)
+    dense_param_bytes = param_bytes - expert_param_bytes
     grad_shard = param_bytes / (layout.model * layout.pipe)   # per DP ring
     local_tokens = tokens / max(layout.dp_ranks, 1)
     layers_per_stage = max(cfg.num_layers // layout.pipe, 1)
@@ -268,15 +307,39 @@ def score_layout(cfg: ModelConfig, shape: ShapeConfig, layout: Layout,
     # --- intra-pod rail traffic, per GPU --------------------------------
     rail = 0.0
     if train and layout.dp_ranks > 1:
-        # FSDP/ZeRO reduce-scatter + all-gather over the data rail group
-        rail += 2 * (layout.data - 1) / max(layout.data, 1) * grad_shard
+        if layout.expert > 1:
+            # dense grads are replicated over the expert axis too, so
+            # their FSDP/ZeRO group widens to data×expert; expert grads
+            # reduce over data only (each expert lives on one EP rank)
+            de = layout.data * layout.expert
+            rail += (2 * (de - 1) / de
+                     * dense_param_bytes / (layout.model * layout.pipe))
+            rail += (2 * (layout.data - 1) / max(layout.data, 1)
+                     * expert_param_bytes
+                     / (layout.expert * layout.model * layout.pipe))
+        else:
+            # FSDP/ZeRO reduce-scatter + all-gather over the data rail group
+            rail += 2 * (layout.data - 1) / max(layout.data, 1) * grad_shard
     if layout.model > 1 and cfg.uses_attention:
         # 2 activation all-reduces per layer fwd (+2 bwd when training)
         n_ar = (4 if train else 2) * layers_per_stage
         rail += (n_ar * 2 * (layout.model - 1) / layout.model
                  * local_tokens * cfg.d_model * ACT_WIRE_BYTES)
-    if layout.model > 1 and cfg.num_experts:
-        # EP all-to-all dispatch+combine (fwd; ×2 when training)
+    a2a_unit = 0.0                       # per-GPU dispatch+combine bytes
+    if layout.expert > 1 and cfg.num_experts:
+        # EP all-to-all over the expert axis (fwd; ×2 when training):
+        # each rank keeps ~1/expert of its routed tokens and exchanges
+        # the rest.  Intra-pod EP rides the per-NIC rails.
+        a2a_unit = ((4 if train else 2) * local_tokens
+                    * cfg.num_experts_per_tok * cfg.d_model * ACT_WIRE_BYTES
+                    * (layout.expert - 1) / layout.expert)
+        if layout.expert_spans_pods:
+            rail += a2a_unit / fabric.pods      # intra-pod share only
+        else:
+            rail += a2a_unit
+    elif layout.model > 1 and cfg.num_experts:
+        # dense-folded EP (no expert axis): dispatch+combine all-to-all
+        # rides the model axis (fwd; ×2 when training)
         rail += ((4 if train else 2) * local_tokens
                  * cfg.num_experts_per_tok * cfg.d_model * ACT_WIRE_BYTES
                  * (layout.model - 1) / layout.model)
@@ -288,12 +351,32 @@ def score_layout(cfg: ModelConfig, shape: ShapeConfig, layout: Layout,
                           * ACT_WIRE_BYTES)
 
     # --- cross-pod spine traffic, total --------------------------------
-    spans = layout.pod > 1 or layout.pipe_spans_pods
+    spans = (layout.pod > 1 or layout.pipe_spans_pods
+             or layout.expert_spans_pods)
     cross_base, pipe_cross_unit = 0.0, 0.0
+    a2a_incast = 1.0
     if spans and layout.pipe_spans_pods:
         # activation p2p at the one stage boundary on the pod cut (×vp)
         pipe_cross_unit = ((2 if train else 1) * tokens * cfg.d_model
                            * ACT_WIRE_BYTES)
+    elif spans and layout.expert_spans_pods:
+        # expert axis on the pod cut: expert grads never cross the spine
+        # (each expert's DP replicas share a pod) — the cut carries only
+        # the dense-remainder all-reduce plus the pod-crossing share of
+        # the dispatch/combine all-to-all.  All-to-all is synchronized
+        # N:1 bursts into each spine port, which DCQCN punishes far
+        # harder than a pipelined ring — charge the aggravated offered
+        # load below via ``a2a_incast``.
+        if train:
+            if schedule.hierarchical:
+                cross_base = (2 * (fabric.pods - 1) / fabric.pods
+                              * dense_param_bytes
+                              * _COMPRESS_FACTOR.get(schedule.compress, 1.0))
+            else:
+                cross_base = 2 * dense_param_bytes * fabric.pods
+        cross_base += (chips * a2a_unit
+                       * (fabric.pods - 1) / fabric.pods)
+        a2a_incast = A2A_INCAST_FACTOR
     elif spans and train:
         if schedule.hierarchical:
             cross_base = (2 * (layout.pod - 1) / layout.pod * param_bytes
@@ -307,7 +390,8 @@ def score_layout(cfg: ModelConfig, shape: ShapeConfig, layout: Layout,
 
     # --- memory feasibility ---------------------------------------------
     state_mult = 4.0 if train else 0.5            # p+g+2×adam | bf16 params
-    shard = layout.model * layout.pipe * (layout.dp_ranks if train else 1)
+    shard = layout.model * layout.pipe * (layout.dp_ranks if train
+                                          else layout.expert)
     hbm = param_bytes * state_mult / max(shard, 1)
     hbm += (local_tokens / max(layout.pipe, 1)) * cfg.d_model \
         * ACT_WIRE_BYTES * 8                      # live activation estimate
@@ -327,7 +411,7 @@ def score_layout(cfg: ModelConfig, shape: ShapeConfig, layout: Layout,
         dcqcn = 1.0
         if cross_v > 0:
             offered = (chips / fabric.pods) * fabric.nic_bw / bisection
-            dcqcn = dcqcn_throughput_factor(offered, fabric)
+            dcqcn = dcqcn_throughput_factor(offered * a2a_incast, fabric)
         spine_s = cross_v / (bisection * dcqcn) if cross_v else 0.0
         bubble = 0.0
         if layout.pipe > 1:
@@ -367,7 +451,9 @@ def naive_production_layout(chips: int,
 
 def enumerate_layouts(cfg: ModelConfig, chips: int,
                       fabric: FabricSpec = FABRIC) -> List[Layout]:
-    """Candidate (pod, data, model[, pipe]) factorizations of ``chips``."""
+    """Candidate (pod, data, expert, model[, pipe]) factorizations of
+    ``chips``; the ``expert`` axis only appears for MoE configs, with EP
+    degrees dividing ``num_experts``."""
     cap = pod_capacity(fabric)
     if chips > cap * fabric.pods:
         raise ValueError(f"{chips} chips exceed fabric capacity "
@@ -376,32 +462,48 @@ def enumerate_layouts(cfg: ModelConfig, chips: int,
     model_opts = [m for m in (1, 2, 4, 8, 16, 32) if chips % m == 0]
     pipe_opts = [p for p in (1, 2, 4, 8, 16)
                  if chips % p == 0 and cfg.num_layers % p == 0]
+    ep_opts = [1]
+    if cfg.num_experts:
+        ep_opts += [e for e in (2, 4, 8, 16, 32)
+                    if cfg.num_experts % e == 0 and chips % e == 0]
     out: List[Layout] = []
     for m in model_opts:
         for p in pipe_opts:
-            # m and p each divide chips, but their PRODUCT may not —
-            # every branch must re-check or the truncated `rest` yields
-            # a layout using fewer chips than requested
-            if chips % (m * p) != 0:
-                continue
-            if pods == 1:
-                rest = chips // (m * p)
-                if rest >= 1:
-                    out.append(Layout(pod=1, data=rest, model=m, pipe=p))
-                continue
-            # pod-spanning DP with hierarchical collectives
-            if chips % (pods * m * p) == 0:
-                rest = chips // (pods * m * p)
-                if rest >= 1:
-                    out.append(Layout(pod=pods, data=rest, model=m, pipe=p))
-            # pipeline stages across the pod cut (pipe ≥ pods, pod-major)
-            if p > 1 and p % pods == 0:
-                rest = chips // (m * p)
-                if rest >= 1:
-                    out.append(Layout(pod=1, data=rest, model=m, pipe=p,
-                                      pipe_spans_pods=True))
-    return sorted(set(out), key=lambda l: (l.pipe_spans_pods, l.pipe,
-                                           l.pod, l.model))
+            for ep in ep_opts:
+                # m/p/ep each divide chips, but their PRODUCT may not —
+                # every branch must re-check or the truncated `rest`
+                # yields a layout using fewer chips than requested
+                if chips % (m * p * ep) != 0:
+                    continue
+                if pods == 1:
+                    rest = chips // (m * p * ep)
+                    if rest >= 1:
+                        out.append(Layout(pod=1, data=rest, model=m,
+                                          pipe=p, expert=ep))
+                    continue
+                # pod-spanning DP with hierarchical collectives
+                if chips % (pods * m * p * ep) == 0:
+                    rest = chips // (pods * m * p * ep)
+                    if rest >= 1:
+                        out.append(Layout(pod=pods, data=rest, model=m,
+                                          pipe=p, expert=ep))
+                # pipeline stages across the pod cut (pipe ≥ pods)
+                if p > 1 and p % pods == 0:
+                    rest = chips // (m * p * ep)
+                    if rest >= 1:
+                        out.append(Layout(pod=1, data=rest, model=m,
+                                          pipe=p, expert=ep,
+                                          pipe_spans_pods=True))
+                # expert axis across the pod cut (ep ≥ pods, pod-major)
+                if ep > 1 and ep % pods == 0:
+                    rest = chips // (m * p * ep)
+                    if rest >= 1:
+                        out.append(Layout(pod=1, data=rest, model=m,
+                                          pipe=p, expert=ep,
+                                          expert_spans_pods=True))
+    return sorted(set(out), key=lambda l: (l.pipe_spans_pods,
+                                           l.expert_spans_pods, l.pipe,
+                                           l.pod, l.expert, l.model))
 
 
 # ---------------------------------------------------------------------------
@@ -623,6 +725,9 @@ def _probe_key(probe_arch: str, shape, layout: Layout) -> str:
     layout_id = (f"pod{layout.pod}-data{layout.data}-model{layout.model}"
                  f"-pipe{layout.pipe}"
                  + ("x" if layout.pipe_spans_pods else ""))
+    if layout.expert > 1:       # suffix only when EP is live: pre-EP cache
+        layout_id += (f"-ep{layout.expert}"       # keys stay valid
+                      + ("x" if layout.expert_spans_pods else ""))
     return f"{probe_arch}_{shape_id}_{layout_id}_jax{jax.__version__}"
 
 
@@ -711,7 +816,7 @@ def plan_parallelism(model_cfg: ModelConfig, *, chips: int,
         else:
             primary = (penalty, s.cross_pod_bytes)
         return (not s.feasible,) + primary + (
-            s.layout.pipe, s.layout.model, s.layout.data)
+            s.layout.pipe, s.layout.model, s.layout.data, s.layout.expert)
 
     scores.sort(key=key)
 
@@ -830,15 +935,16 @@ def _parse_kv_layout(spec: str) -> Tuple[Layout, int]:
     for part in spec.split(","):
         k, _, v = part.partition("=")
         k = k.strip()
-        if k not in ("pod", "data", "model", "pipe", "vp"):
+        if k not in ("pod", "data", "ep", "model", "pipe", "vp"):
             raise ValueError(f"unknown layout key {k!r} in {spec!r} "
-                             "(want pod/data/model/pipe/vp)")
+                             "(want pod/data/ep/model/pipe/vp)")
         kv[k] = int(v)
     vp = kv.pop("vp", 1)
     if vp > 1 and kv.get("pipe", 1) <= 1:
         raise ValueError(f"vp={vp} needs pipe>1 in {spec!r}")
     return Layout(pod=kv.get("pod", 1), data=kv.get("data", 1),
-                  model=kv.get("model", 1), pipe=kv.get("pipe", 1)), vp
+                  model=kv.get("model", 1), pipe=kv.get("pipe", 1),
+                  expert=kv.get("ep", 1)), vp
 
 
 def resolve_plan(spec: Optional[str] = None,

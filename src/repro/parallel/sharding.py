@@ -34,6 +34,8 @@ Rules = Dict[str, AxisCandidates]
 # Axis roles:
 #   pod    — cross-pod data parallelism (the paper's two-pod spine hop)
 #   data   — intra-pod data parallelism + FSDP weight/optimizer sharding
+#   expert — expert parallelism for MoE (routed weights + dispatched
+#            tokens; acts as extra data parallelism for dense weights)
 #   model  — tensor parallelism (heads / mlp / vocab / experts)
 #
 # Candidates are tried in order; each entry is a tuple of mesh axes that
@@ -44,12 +46,15 @@ Rules = Dict[str, AxisCandidates]
 # module-``__getattr__`` deprecation shim over this table.
 _DEFAULT_RULES: Rules = {
     # activations
-    "batch":        (("pod", "data"), ("data",), ("pod",)),
+    # the expert axis joins the batch shard on EP meshes (EP-as-DP for
+    # activations outside the routed FFN); dropped where absent
+    "batch":        (("pod", "data", "expert"), ("pod", "data"),
+                     ("data", "expert"), ("data",), ("pod",)),
     "act_seq":      (("model",),),            # sequence parallel regions
     "act_embed":    (),                       # replicated within shard
     "act_heads":    (("model",),),
     "act_mlp":      (("model",),),
-    "act_exp":      (("model",),),
+    "act_exp":      (("expert",), ("model",)),
     # weights (FSDP over data; TP over model)
     "vocab":        (("model",),),
     "embed":        (("data",), ("model",)),
@@ -61,7 +66,10 @@ _DEFAULT_RULES: Rules = {
     "kv_heads":     (("model",),),
     "head_dim":     (),
     "qkv_embed":    (("data",),),             # embed dim of attention weights
-    "experts":      (("model",), ("data",)),
+    # experts prefer the dedicated EP axis (Mixtral's 8 experts on a
+    # 16-way cell → ep=8 with TP-on-d_ff via `mlp`); the model/data
+    # candidates are the dense-folded fallback on EP-less meshes
+    "experts":      (("expert",), ("model",), ("data",)),
     "ssm_heads":    (("model",),),
     "ssm_state":    (),
     "conv_width":   (),

@@ -56,10 +56,40 @@ def test_moe_grads_flow_to_experts():
     cfg, p, x = _moe_setup()
     def loss(p):
         y, aux = M.moe_sorted_capacity(p, x, cfg)
-        return (y ** 2).mean() + 0.01 * aux
+        return (y ** 2).mean() + 0.01 * aux["aux_loss"]
     g = jax.grad(loss)(p)
     assert float(jnp.abs(g["w1"]).max()) > 0
     assert float(jnp.abs(g["router"]).max()) > 0
+
+
+def test_aux_loss_hand_computed_topk():
+    """Pin the top-k generalization against a hand computation.
+
+    2 tokens, E=3, k=2.  Router probs rows: [.5, .3, .2] and [.1, .6, .3];
+    top-2 ids: {0,1} and {1,2}.  Assignment fractions over B*S*k = 4
+    routed slots: f = [1/4, 2/4, 1/4]; mean probs P = [.3, .45, .25].
+    aux = E * sum(f*P) = 3 * (0.075 + 0.225 + 0.0625) = 1.0875."""
+    probs = jnp.asarray([[[0.5, 0.3, 0.2], [0.1, 0.6, 0.3]]])
+    ids = jnp.asarray([[[0, 1], [1, 2]]])
+    aux = M.aux_load_balance_loss(probs, ids, 3)
+    assert float(aux) == pytest.approx(1.0875, abs=1e-6)
+
+
+def test_dropped_frac_zero_at_full_capacity():
+    """capacity_factor = E/k gives C = S: no assignment can ever drop."""
+    cfg, p, x = _moe_setup()
+    cf = cfg.num_experts / cfg.num_experts_per_tok
+    _, aux = M.moe_sorted_capacity(p, x, cfg, capacity_factor=cf)
+    assert float(aux["dropped_frac"]) == pytest.approx(0.0, abs=1e-7)
+
+
+def test_dropped_frac_positive_when_tight():
+    """At cf well below 1 some assignments must drop, and the metric
+    stays a valid fraction."""
+    cfg, p, x = _moe_setup()
+    _, aux = M.moe_sorted_capacity(p, x, cfg, capacity_factor=0.5)
+    df = float(aux["dropped_frac"])
+    assert 0.0 < df < 1.0
 
 
 # ---------------------------------------------------------------------------
